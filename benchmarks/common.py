@@ -1,0 +1,46 @@
+"""Benchmark utilities. Every benchmark returns rows
+(name, us_per_call, derived) and benchmarks/run.py prints them as CSV.
+
+CPU wall-times here are *sanity numbers* — the performance claims live in
+EXPERIMENTS.md §Roofline (dry-run derived). Sizes are scaled down from the
+paper's 2^16..2^21 Kronecker graphs to keep the suite minutes-long on one
+CPU core; the scaling *trends* (the figures' shapes) are what is checked.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import EdgeStream, SubstreamConfig
+from repro.graph.generators import kronecker_graph, uniform_weights
+
+
+def timed(fn, *args, reps: int = 3, warmup: int = 1, **kw):
+    for _ in range(warmup):
+        out = fn(*args, **kw)
+        jax.block_until_ready(out) if hasattr(out, "block_until_ready") or isinstance(
+            out, jax.Array
+        ) else None
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        try:
+            jax.tree_util.tree_map(
+                lambda x: x.block_until_ready() if isinstance(x, jax.Array) else x, out
+            )
+        except Exception:
+            pass
+        ts.append(time.perf_counter() - t0)
+    return min(ts), out
+
+
+def make_workload(scale: int, edge_factor: int, L: int, eps: float, seed: int = 0):
+    src, dst = kronecker_graph(scale, edge_factor, seed=seed)
+    w = uniform_weights(len(src), L, eps, seed=seed)
+    n = 1 << scale
+    cfg = SubstreamConfig(n=n, L=L, eps=eps)
+    stream = EdgeStream.from_numpy(src, dst, w)
+    return stream, cfg

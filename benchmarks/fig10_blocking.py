@@ -1,0 +1,27 @@
+"""Fig. 10: influence of epoch size K. Paper: SC-OPT 125->175M e/s as K
+grows (fewer epoch stalls, more matching-bit sharing), flattening by K=256.
+Here K changes the lexicographic order (reuse locality) and we also report
+the model-level epoch count + DRAM-traffic estimate from the paper's
+cost model (§4.2.4: v-bit transfers shrink n -> n/K)."""
+from benchmarks.common import make_workload, timed
+from repro.core import mwm_blocked
+
+
+def run(scale=12, L=16, eps=0.1):
+    rows = []
+    stream, cfg = make_workload(scale, 16, L, eps)
+    m = int(stream.valid.sum())
+    n = cfg.n
+    for K in (1, 8, 32, 128, 256):
+        dt, _ = timed(lambda: mwm_blocked(stream, cfg, K=K))
+        epochs = -(-n // K)
+        # §4.2.4 model: v-bit chunk traffic n/K + per-edge stream traffic
+        vbit_chunks = epochs + m / 8
+        rows.append(
+            (
+                f"fig10/blocked/K={K}",
+                dt * 1e6,
+                f"{m/dt/1e6:.2f}Me/s;reads/edge={vbit_chunks/m + 1/8:.3f}",
+            )
+        )
+    return rows

@@ -1,0 +1,20 @@
+"""Fig. 11: influence of substream count L. Paper: CS-SEQ degrades ~1/L,
+SC-OPT stays ~140M e/s because L rides the bit-parallel (here: lane) axis.
+The lane-parallel analogue is the vectorized scan/rounds: time should grow
+far slower than L."""
+from benchmarks.common import make_workload, timed
+from repro.core import SubstreamConfig, mwm_rounds, mwm_scan
+
+
+def run(scale=11, eps_by_L=None):
+    eps_by_L = eps_by_L or {1: 0.6, 8: 0.6, 32: 0.6, 64: 0.1, 128: 0.1}
+    rows = []
+    for L, eps in eps_by_L.items():
+        stream, _ = make_workload(scale, 16, L, eps)
+        cfg = SubstreamConfig(n=1 << scale, L=L, eps=eps)
+        m = int(stream.valid.sum())
+        dt, _ = timed(lambda: mwm_scan(stream, cfg))
+        rows.append((f"fig11/scan/L={L}", dt * 1e6, f"{m/dt/1e6:.2f}Me/s"))
+        dt, _ = timed(lambda: mwm_rounds(stream, cfg))
+        rows.append((f"fig11/rounds/L={L}", dt * 1e6, f"{m/dt/1e6:.2f}Me/s"))
+    return rows

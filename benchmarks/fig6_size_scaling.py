@@ -1,0 +1,25 @@
+"""Fig. 6: throughput (edges/s) vs graph size, Kronecker power-law.
+
+Paper: CS-SEQ ~3M e/s flat, SC-OPT 135->140M e/s (FPGA). Here the CPU
+wall-clock analogue compares the same algorithm variants; the roofline
+(EXPERIMENTS §Roofline) carries the TPU projection.
+"""
+from benchmarks.common import make_workload, timed
+from repro.core import mwm_blocked, mwm_rounds, mwm_scan
+
+
+def run(scales=(10, 12, 14), L=16, eps=0.1):
+    rows = []
+    for scale in scales:
+        stream, cfg = make_workload(scale, 16, L, eps)
+        m = int(stream.valid.sum())
+        for name, fn in [
+            ("cs_seq_scan", lambda: mwm_scan(stream, cfg)),
+            ("sc_blocked", lambda: mwm_blocked(stream, cfg, K=32)),
+            ("sc_parallel_rounds", lambda: mwm_rounds(stream, cfg)),
+        ]:
+            dt, _ = timed(fn)
+            rows.append(
+                (f"fig6/{name}/2^{scale}", dt * 1e6, f"{m/dt/1e6:.2f}Me/s")
+            )
+    return rows

@@ -1,0 +1,23 @@
+"""Fig. 7: real-world graphs (offline standins with matched degree, see
+DESIGN.md §7). Paper: SC-OPT fastest on every graph (45-140M e/s)."""
+from benchmarks.common import timed
+from repro.core import EdgeStream, SubstreamConfig, gseq, mwm_blocked, mwm_scan
+from repro.graph.generators import kronecker_graph, uniform_weights
+
+# (name, scale, edge_factor) — degree-matched standins
+STANDINS = [("arxiv-like", 11, 12), ("stanford-like", 12, 8), ("gowalla-like", 13, 5)]
+
+
+def run(L=16, eps=0.1):
+    rows = []
+    for name, scale, ef in STANDINS:
+        src, dst = kronecker_graph(scale, ef, seed=3)
+        w = uniform_weights(len(src), L, eps, seed=3)
+        cfg = SubstreamConfig(n=1 << scale, L=L, eps=eps)
+        stream = EdgeStream.from_numpy(src, dst, w)
+        m = len(src)
+        dt, _ = timed(lambda: mwm_blocked(stream, cfg, K=32))
+        rows.append((f"fig7/sc_blocked/{name}", dt * 1e6, f"{m/dt/1e6:.2f}Me/s"))
+        dt, _ = timed(lambda: gseq(stream, cfg.n, eps), reps=2)
+        rows.append((f"fig7/gseq/{name}", dt * 1e6, f"{m/dt/1e6:.2f}Me/s"))
+    return rows

@@ -1,0 +1,19 @@
+"""Fig. 8: strong scaling with parallelism T. The CPU analogue of CS-PAR's
+threads is substream-sharded work: we vary the substream count processed
+per pass and measure per-substream throughput of the rounds matcher
+(vectorized over L on the VPU lanes — the FPGA's bit-parallel dimension)."""
+from benchmarks.common import make_workload, timed
+from repro.core import SubstreamConfig, mwm_rounds
+
+
+def run(scale=12, eps=0.1):
+    rows = []
+    stream, _ = make_workload(scale, 16, 64, eps)
+    m = int(stream.valid.sum())
+    for L in (1, 4, 16, 64):
+        cfg = SubstreamConfig(n=1 << scale, L=L, eps=eps)
+        dt, _ = timed(lambda: mwm_rounds(stream, cfg))
+        rows.append(
+            (f"fig8/rounds/L={L}", dt * 1e6, f"{m*L/dt/1e6:.2f}M(edge*sub)/s")
+        )
+    return rows

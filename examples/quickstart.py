@@ -1,0 +1,35 @@
+"""Quickstart: substream-centric (4+eps)-approx maximum weighted matching.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import (
+    EdgeStream,
+    SubstreamConfig,
+    exact_mwm_weight,
+    mwm_pipeline,
+)
+from repro.graph.generators import kronecker_graph, uniform_weights
+
+
+def main():
+    L, eps = 16, 0.1
+    src, dst = kronecker_graph(scale=8, edge_factor=8, seed=0)
+    w = uniform_weights(len(src), L, eps, seed=0)
+    stream = EdgeStream.from_numpy(src, dst, w)
+    cfg = SubstreamConfig(n=256, L=L, eps=eps)
+
+    for variant in ("scan", "blocked", "rounds", "pallas"):
+        kw = dict(block_e=256) if variant == "pallas" else {}
+        idx, weight = mwm_pipeline(stream, cfg, part1=variant, **kw)
+        print(f"{variant:8s}: |T|={len(idx):4d}  w(T)={weight:9.2f}")
+
+    exact = exact_mwm_weight(stream)
+    idx, weight = mwm_pipeline(stream, cfg)
+    print(f"exact MWM weight {exact:.2f}; ratio {exact/weight:.3f} "
+          f"(guarantee <= {4 + eps})")
+
+
+if __name__ == "__main__":
+    main()

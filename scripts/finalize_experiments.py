@@ -1,0 +1,14 @@
+"""Inject the dry-run tables into EXPERIMENTS.md (run after the sweep)."""
+import sys
+
+sys.path.insert(0, "src")
+from repro.launch.report import render_multipod_check, render_table  # noqa: E402
+
+text = open("EXPERIMENTS.md.tmpl").read()
+text = text.replace("{{ROOFLINE_TABLE}}", render_table("dryrun_results.json"))
+text = text.replace(
+    "{{BASELINE_TABLE}}", render_table("dryrun_baseline.json")
+)
+text = text.replace("{{MULTIPOD}}", render_multipod_check("dryrun_results.json"))
+open("EXPERIMENTS.md", "w").write(text)
+print("EXPERIMENTS.md written")

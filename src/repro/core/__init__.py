@@ -1,0 +1,75 @@
+"""Substream-centric maximum weighted matching — the paper's contribution.
+
+Public API:
+  EdgeStream, SubstreamConfig, MatchingResult  — data types
+  mwm_scan              — faithful Listing 1 Part 1 (CS-SEQ oracle)
+  substream_matchings   — full [m, L] per-substream membership
+  mwm_blocked           — Listing 2 blocked/lexicographic (SC-OPT path)
+  mwm_rounds(_sharded)  — deterministic parallel rounds (beyond-paper)
+  merge_host/merge_device — Part 2 greedy merge
+  gseq                  — Ghaffari (2+eps) baseline (G-SEQ)
+  exact_mwm_weight      — networkx oracle (tests/benchmarks)
+  mwm_pipeline          — end-to-end: Part 1 + Part 2 → matching + weight
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.types import (
+    EdgeStream,
+    MatchingResult,
+    SubstreamConfig,
+    eligibility,
+)
+from repro.core.matching import mwm_scan, substream_matchings
+from repro.core.blocked import mwm_blocked, lexicographic_order, permute_stream
+from repro.core.rounds import mwm_rounds, mwm_rounds_sharded
+from repro.core.merge import merge_host, merge_device, matching_weight
+from repro.core.gseq import gseq
+from repro.core.exact import exact_mwm_weight
+
+
+def mwm_pipeline(
+    stream: EdgeStream,
+    cfg: SubstreamConfig,
+    part1: str = "scan",
+    K: int = 32,
+    **kw,
+):
+    """End-to-end (4+eps)-approx MWM. Returns (edge_indices, weight).
+
+    part1 in {'scan', 'blocked', 'pallas', 'rounds'}.
+    """
+    if part1 == "scan":
+        res = mwm_scan(stream, cfg)
+    elif part1 == "blocked":
+        res = mwm_blocked(stream, cfg, K=K, backend="scan")
+    elif part1 == "pallas":
+        res = mwm_blocked(stream, cfg, K=K, backend="pallas", **kw)
+    elif part1 == "rounds":
+        res = mwm_rounds(stream, cfg)
+    else:
+        raise ValueError(part1)
+    idx = merge_host(stream, res, cfg)
+    return idx, matching_weight(stream, idx)
+
+
+__all__ = [
+    "EdgeStream",
+    "MatchingResult",
+    "SubstreamConfig",
+    "eligibility",
+    "mwm_scan",
+    "substream_matchings",
+    "mwm_blocked",
+    "lexicographic_order",
+    "permute_stream",
+    "mwm_rounds",
+    "mwm_rounds_sharded",
+    "merge_host",
+    "merge_device",
+    "matching_weight",
+    "gseq",
+    "exact_mwm_weight",
+    "mwm_pipeline",
+]

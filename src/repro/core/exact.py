@@ -1,0 +1,26 @@
+"""Exact MWM oracle (networkx blossom) — test/benchmark reference only."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.types import EdgeStream
+
+
+def exact_mwm_weight(stream: EdgeStream) -> float:
+    import networkx as nx
+
+    src = np.asarray(stream.src)
+    dst = np.asarray(stream.dst)
+    w = np.asarray(stream.weight)
+    valid = np.asarray(stream.valid)
+    g = nx.Graph()
+    for u, v, wt, ok in zip(src, dst, w, valid):
+        if not ok or u == v:
+            continue
+        # parallel edges: keep the max weight (a matching would pick it)
+        if g.has_edge(int(u), int(v)):
+            g[int(u)][int(v)]["weight"] = max(g[int(u)][int(v)]["weight"], float(wt))
+        else:
+            g.add_edge(int(u), int(v), weight=float(wt))
+    m = nx.max_weight_matching(g, maxcardinality=False)
+    return float(sum(g[u][v]["weight"] for u, v in m))

@@ -1,0 +1,57 @@
+"""G-SEQ — Ghaffari / Paz–Schwartzman (2+eps) semi-streaming MWM baseline.
+
+The paper benchmarks against this algorithm (§5.1.1, [62]); we implement it
+so every paper figure has its comparison target. Local-ratio scheme:
+
+  for each streamed edge e=(u,v,w):
+      if w >= (1+eps') * (phi[u] + phi[v]):
+          g = w - phi[u] - phi[v]
+          push e (stack);  phi[u] += g;  phi[v] += g
+  unwind the stack, greedily keeping edges whose endpoints are free.
+
+Space O(n log n) bits + stack; one pass. Approximation (2 + eps).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import EdgeStream
+
+
+@partial(jax.jit, static_argnames=("n", "eps"))
+def _gseq_pass(stream: EdgeStream, n: int, eps: float):
+    def step(phi, e):
+        u, v, w, ok = e
+        u = u.astype(jnp.int32)
+        v = v.astype(jnp.int32)
+        keep = ok & (w >= (1.0 + eps) * (phi[u] + phi[v])) & (u != v)
+        g = jnp.where(keep, w - phi[u] - phi[v], 0.0)
+        phi = phi.at[u].add(g)
+        phi = phi.at[v].add(g)
+        return phi, keep
+
+    phi0 = jnp.zeros((n,), jnp.float32)
+    _, kept = jax.lax.scan(
+        step, phi0, (stream.src, stream.dst, stream.weight, stream.valid)
+    )
+    return kept
+
+
+def gseq(stream: EdgeStream, n: int, eps: float = 0.1) -> np.ndarray:
+    """Returns stream indices of the (2+eps)-approximate matching."""
+    kept = np.asarray(_gseq_pass(stream, n, eps))
+    src = np.asarray(stream.src)
+    dst = np.asarray(stream.dst)
+    used = np.zeros(n, bool)
+    out = []
+    for e in np.nonzero(kept)[0][::-1]:  # unwind stack (reverse order)
+        u, v = src[e], dst[e]
+        if not used[u] and not used[v]:
+            used[u] = True
+            used[v] = True
+            out.append(e)
+    return np.asarray(sorted(out), dtype=np.int64)

@@ -1,0 +1,70 @@
+"""Part 2 (post processing) — greedy merge of the L matchings into the MWM.
+
+The paper runs this on the CPU (<1 % of time, little parallelism). We keep
+the faithful host version (numpy) and additionally offer a device version
+built on the same greedy-priority machinery as Part 1: merging in
+"descending i, then stream order" is itself a greedy maximal matching under
+the total priority order ``(L-1-i, position)``, so `mwm_scan` can run it.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import EdgeStream, MatchingResult, SubstreamConfig
+from repro.core import matching as _matching
+
+
+def merge_host(
+    stream: EdgeStream, result: MatchingResult, cfg: SubstreamConfig
+) -> np.ndarray:
+    """Faithful Listing 1 Part 2. Returns indices (into the stream) of T."""
+    src = np.asarray(stream.src)
+    dst = np.asarray(stream.dst)
+    assigned = np.asarray(result.assigned)
+    tbits = np.zeros(cfg.n, dtype=bool)
+    out = []
+    # iterate i = L-1 .. 0; C[i] preserves stream order (list append order)
+    for i in range(cfg.L - 1, -1, -1):
+        for e in np.nonzero(assigned == i)[0]:
+            u, v = src[e], dst[e]
+            if not tbits[u] and not tbits[v]:
+                tbits[u] = True
+                tbits[v] = True
+                out.append(e)
+    return np.asarray(sorted(out), dtype=np.int64)
+
+
+def merge_device(
+    stream: EdgeStream, result: MatchingResult, cfg: SubstreamConfig
+) -> jax.Array:
+    """Device-side merge: bool [m] membership mask of T (beyond-paper).
+
+    Re-orders the recorded edges by (descending i, stream position) and runs
+    the same one-substream greedy scan. Bit-identical to `merge_host`.
+    """
+    m = stream.num_edges
+    assigned = result.assigned
+    recorded = assigned >= 0
+    # priority: (L-1-i) major, stream position minor — a *stable* argsort on
+    # the major key alone keeps stream order inside each substream list.
+    major = jnp.where(recorded, cfg.L - 1 - assigned, cfg.L)
+    order = jnp.argsort(major, stable=True)
+    perm = EdgeStream(
+        src=stream.src[order],
+        dst=stream.dst[order],
+        weight=jnp.ones((m,), jnp.float32),  # single substream, all eligible
+        valid=recorded[order],
+    )
+    one = SubstreamConfig(n=cfg.n, L=1, eps=cfg.eps)
+    res = _matching.mwm_scan(perm, one)
+    in_t_perm = res.assigned >= 0
+    # scatter back to stream order
+    mask = jnp.zeros((m,), bool).at[order].set(in_t_perm)
+    return mask
+
+
+def matching_weight(stream: EdgeStream, edge_idx: np.ndarray) -> float:
+    w = np.asarray(stream.weight)
+    return float(w[np.asarray(edge_idx)].sum())

@@ -1,0 +1,98 @@
+"""Core data types for the substream-centric matching framework.
+
+An edge stream is a struct-of-arrays: ``src[i], dst[i], weight[i]`` in
+*stream order* (the order the paper's FPGA would receive them). All
+algorithms in :mod:`repro.core` treat the stream order as the greedy
+priority order, exactly like Listing 1 of the paper.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class EdgeStream:
+    """A weighted edge stream. ``src``/``dst`` are int32 [m], ``weight`` f32 [m].
+
+    ``valid`` masks padding edges (False entries are ignored by every
+    matcher); padding lets us keep shapes static under jit/shard_map.
+    """
+
+    src: jax.Array
+    dst: jax.Array
+    weight: jax.Array
+    valid: jax.Array  # bool [m]
+
+    @property
+    def num_edges(self) -> int:
+        return self.src.shape[0]
+
+    @staticmethod
+    def from_numpy(src, dst, weight, n_pad: Optional[int] = None) -> "EdgeStream":
+        src = np.asarray(src, np.int32)
+        dst = np.asarray(dst, np.int32)
+        weight = np.asarray(weight, np.float32)
+        m = src.shape[0]
+        m_pad = m if n_pad is None else n_pad
+        if m_pad < m:
+            raise ValueError(f"pad {m_pad} < m {m}")
+        pad = m_pad - m
+        valid = np.concatenate([np.ones(m, bool), np.zeros(pad, bool)])
+        z = np.zeros(pad, np.int32)
+        return EdgeStream(
+            src=jnp.asarray(np.concatenate([src, z])),
+            dst=jnp.asarray(np.concatenate([dst, z])),
+            weight=jnp.asarray(np.concatenate([weight, np.zeros(pad, np.float32)])),
+            valid=jnp.asarray(valid),
+        )
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SubstreamConfig:
+    """Parameters of the Crouch–Stubbs reduction.
+
+    ``L`` substreams; substream ``i`` admits edges with
+    ``w >= (1 + eps)**i``. The paper selects ``eps`` per L
+    (Fig. 11 caption); we expose both knobs.
+    """
+
+    n: int = dataclasses.field(metadata=dict(static=True))
+    L: int = dataclasses.field(metadata=dict(static=True))
+    eps: float = dataclasses.field(default=0.1, metadata=dict(static=True))
+
+    def thresholds(self) -> jax.Array:
+        """[L] array of substream admission thresholds (1+eps)^i."""
+        i = jnp.arange(self.L, dtype=jnp.float32)
+        return (1.0 + self.eps) ** i
+
+    @property
+    def w_max(self) -> float:
+        return float((1.0 + self.eps) ** self.L)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class MatchingResult:
+    """Output of Part 1 (stream processing).
+
+    ``assigned`` int32 [m]: the substream index whose list ``C[i]`` records
+    the edge (the *highest* eligible substream where both endpoints were
+    free), or -1 if the edge entered no list. ``mb`` bool [n, L]: final
+    matching bits.
+    """
+
+    assigned: jax.Array
+    mb: jax.Array
+
+
+def eligibility(weights: jax.Array, thresholds: jax.Array) -> jax.Array:
+    """te[e, i] = w(e) >= (1+eps)^i — the L-bit eligibility vector (§4.4 Stage 4)."""
+    return weights[:, None] >= thresholds[None, :]

@@ -1,0 +1,13 @@
+from repro.data.pipeline import (
+    TokenPipeline,
+    GraphStreamPipeline,
+    RecsysPipeline,
+    make_gnn_batch,
+)
+
+__all__ = [
+    "TokenPipeline",
+    "GraphStreamPipeline",
+    "RecsysPipeline",
+    "make_gnn_batch",
+]

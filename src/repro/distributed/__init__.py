@@ -1,0 +1,15 @@
+from repro.distributed.sharding import (
+    sharding_rules,
+    constrain,
+    current_rules,
+)
+from repro.distributed.straggler import StragglerMonitor
+from repro.distributed.elastic import plan_remesh
+
+__all__ = [
+    "sharding_rules",
+    "constrain",
+    "current_rules",
+    "StragglerMonitor",
+    "plan_remesh",
+]

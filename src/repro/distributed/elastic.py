@@ -1,0 +1,58 @@
+"""Elastic scaling: rebuild the mesh after membership changes and reshard.
+
+Flow on a real cluster: a node dies -> the job restarts on the survivors
+(or an enlarged pool) -> ``plan_remesh`` picks the largest valid mesh ->
+the checkpoint (which stores *unsharded logical* arrays, see
+repro.checkpoint) is restored with the new shardings. Nothing in the
+checkpoint format depends on the old topology, which is what makes this
+work. Exercised end-to-end on host devices in tests/test_fault_tolerance.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class RemeshPlan:
+    data: int
+    model: int
+    pod: int  # 0 -> no pod axis
+    dropped_devices: int
+
+    @property
+    def n_devices(self) -> int:
+        return max(self.pod, 1) * self.data * self.model
+
+
+def plan_remesh(n_available: int, *, prefer_model: int = 16,
+                min_model: int = 1) -> RemeshPlan:
+    """Largest (data, model) mesh fitting n_available devices.
+
+    Keeps the model axis as close to `prefer_model` as the pool allows
+    (TP degree changes force weight resharding but stay legal for any
+    divisor of the original), then maximizes data. Excess devices idle.
+    """
+    model = min(prefer_model, n_available)
+    while model > min_model and n_available // model < 1:
+        model //= 2
+    # model axis must divide cleanly into the pool to keep SPMD rectangular
+    while model > min_model and (n_available // model) * model < n_available * 0.5:
+        model //= 2
+    data = max(1, n_available // model)
+    used = data * model
+    return RemeshPlan(data=data, model=model, pod=0,
+                      dropped_devices=n_available - used)
+
+
+def build_mesh(plan: RemeshPlan, devices=None):
+    devices = devices if devices is not None else jax.devices()
+    devices = devices[: plan.n_devices]
+    import numpy as np
+
+    arr = np.asarray(devices).reshape(
+        (plan.pod, plan.data, plan.model) if plan.pod else (plan.data, plan.model)
+    )
+    names = ("pod", "data", "model") if plan.pod else ("data", "model")
+    return jax.sharding.Mesh(arr, names)

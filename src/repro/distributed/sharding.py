@@ -1,0 +1,51 @@
+"""Logical-axis sharding constraints for model internals.
+
+Models call ``constrain(x, "expert", "dp", None)`` with *logical* names;
+whether that becomes a real with_sharding_constraint depends on the rules
+installed by the trainer/dry-run (``with sharding_rules(rules): ...``).
+Smoke tests run with no rules installed -> constraints are no-ops, the same
+model code runs on one CPU device.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_state = threading.local()
+
+
+def current_rules():
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def sharding_rules(rules: dict):
+    prev = current_rules()
+    _state.rules = rules
+    try:
+        yield
+    finally:
+        _state.rules = prev
+
+
+def constrain(x, *logical):
+    rules = current_rules()
+    if rules is None:
+        return x
+    axes = []
+    used = set()
+    for name in logical:
+        ax = rules.get(name) if name is not None else None
+        key = tuple(ax) if isinstance(ax, (tuple, list)) else (ax,)
+        if ax is not None and any(k in used for k in key):
+            ax = None
+        if ax is not None:
+            used.update(key)
+        axes.append(ax)
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*axes))
+    except Exception:
+        return x

@@ -1,0 +1,33 @@
+"""Graph substrate: generators, CSR (incl. the paper's custom layout),
+segment-op message passing, neighbor sampling, partitioning, coarsening."""
+from repro.graph.generators import kronecker_graph, uniform_weights, real_graph_standin
+from repro.graph.csr import CSRGraph, CustomCSR
+from repro.graph.segment import (
+    segment_sum,
+    segment_mean,
+    segment_max,
+    segment_softmax,
+    scatter_messages,
+    degrees,
+)
+from repro.graph.sampler import NeighborSampler
+from repro.graph.partition import partition_edges, partition_vertices
+from repro.graph.coarsen import coarsen_by_matching
+
+__all__ = [
+    "kronecker_graph",
+    "uniform_weights",
+    "real_graph_standin",
+    "CSRGraph",
+    "CustomCSR",
+    "segment_sum",
+    "segment_mean",
+    "segment_max",
+    "segment_softmax",
+    "scatter_messages",
+    "degrees",
+    "NeighborSampler",
+    "partition_edges",
+    "partition_vertices",
+    "coarsen_by_matching",
+]

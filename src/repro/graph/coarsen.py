@@ -1,0 +1,53 @@
+"""Graph coarsening by matching — the paper's technique applied to the GNN
+substrate (§Arch-applicability in DESIGN.md).
+
+Matched edges are contracted: both endpoints merge into one super-vertex.
+Heavy-edge coarsening via MWM is the classic multilevel-partitioning move
+(METIS-style); here the matcher *is* the substream-centric algorithm, so
+GNN pipelines get a provably-(4+eps)-weight coarsening pass that runs on
+the accelerator.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (
+    EdgeStream,
+    SubstreamConfig,
+    merge_host,
+    mwm_scan,
+)
+
+
+def coarsen_by_matching(src, dst, weight, n: int, L: int = 32, eps: float = 0.1):
+    """Returns (mapping [n] -> coarse id, coarse_src, coarse_dst, coarse_w).
+
+    Coarse edge weights are summed over merged multi-edges; intra-cluster
+    edges vanish.
+    """
+    src = np.asarray(src, np.int64)
+    dst = np.asarray(dst, np.int64)
+    weight = np.asarray(weight, np.float32)
+    stream = EdgeStream.from_numpy(src, dst, weight)
+    cfg = SubstreamConfig(n=n, L=L, eps=eps)
+    res = mwm_scan(stream, cfg)
+    matched = merge_host(stream, res, cfg)
+
+    mapping = np.arange(n, dtype=np.int64)
+    for e in matched:
+        u, v = src[e], dst[e]
+        mapping[max(u, v)] = min(u, v)
+    # compress ids
+    uniq, mapping = np.unique(mapping, return_inverse=True)
+    cs, cd = mapping[src], mapping[dst]
+    keep = cs != cd
+    cs, cd, cw = cs[keep], cd[keep], weight[keep]
+    lo, hi = np.minimum(cs, cd), np.maximum(cs, cd)
+    key = lo * len(uniq) + hi
+    order = np.argsort(key, kind="stable")
+    key, lo, hi, cw = key[order], lo[order], hi[order], cw[order]
+    boundary = np.concatenate([[True], key[1:] != key[:-1]])
+    group = np.cumsum(boundary) - 1
+    agg_w = np.zeros(group[-1] + 1 if len(group) else 0, np.float32)
+    np.add.at(agg_w, group, cw)
+    return mapping, lo[boundary], hi[boundary], agg_w

@@ -1,0 +1,47 @@
+"""Segment-op message passing — the GNN primitive (JAX has BCOO only, so
+message passing is gather -> transform -> segment-reduce, per the brief)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_sum(data, segment_ids, num_segments: int):
+    return jax.ops.segment_sum(data, segment_ids, num_segments=num_segments)
+
+
+def segment_max(data, segment_ids, num_segments: int):
+    return jax.ops.segment_max(data, segment_ids, num_segments=num_segments)
+
+
+def segment_mean(data, segment_ids, num_segments: int):
+    s = segment_sum(data, segment_ids, num_segments)
+    cnt = segment_sum(jnp.ones((data.shape[0],), data.dtype), segment_ids, num_segments)
+    return s / jnp.maximum(cnt, 1.0)[(...,) + (None,) * (data.ndim - 1)]
+
+
+def segment_softmax(scores, segment_ids, num_segments: int):
+    """Edge-softmax (GAT-style): softmax of `scores` within each segment."""
+    mx = segment_max(scores, segment_ids, num_segments)
+    ex = jnp.exp(scores - mx[segment_ids])
+    z = segment_sum(ex, segment_ids, num_segments)
+    return ex / jnp.maximum(z[segment_ids], 1e-9)
+
+
+def scatter_messages(node_feats, src, dst, num_nodes: int, reduce: str = "sum"):
+    """h'_v = reduce_{(u,v) in E} h_u — plain message passing."""
+    msgs = node_feats[src]
+    if reduce == "sum":
+        return segment_sum(msgs, dst, num_nodes)
+    if reduce == "mean":
+        return segment_mean(msgs, dst, num_nodes)
+    if reduce == "max":
+        return segment_max(msgs, dst, num_nodes)
+    raise ValueError(reduce)
+
+
+def degrees(src, dst, num_nodes: int):
+    ones = jnp.ones_like(src, dtype=jnp.float32)
+    return segment_sum(ones, src, num_nodes) + segment_sum(ones, dst, num_nodes)

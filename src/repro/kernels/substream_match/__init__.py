@@ -1,0 +1,1 @@
+from repro.kernels.substream_match.ops import substream_match  # noqa: F401

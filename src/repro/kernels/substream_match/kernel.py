@@ -1,0 +1,119 @@
+"""Pallas TPU kernel: the paper's 8-stage edge-processor pipeline (§4.4).
+
+TPU mapping of the FPGA design:
+
+  FPGA                                   TPU (this kernel)
+  ------------------------------------   --------------------------------
+  BRAM-resident matching bits            VMEM scratch  mb[n_pad, L_pad] i8
+  L-bit bit-parallel matching word       one vector row, L on the lane axis
+  1 edge / cycle pipeline                lax.fori_loop, 1 edge / iteration
+  DRAM edge stream + prefetch            HBM->VMEM BlockSpec pipeline over
+                                         edge blocks (double-buffered by
+                                         the Pallas grid pipeline)
+  epoch double-buffer of u-bits          whole bit-block stays resident;
+                                         the lexicographic pre-sort keeps
+                                         row touches epoch-local anyway
+
+Stage map (Listing 2): Stage 1-3 = row loads (pl.load, dynamic slice),
+Stage 4 = threshold compare (te), Stage 5 = matching update, Stage 6 =
+row stores, Stage 7 = highest-set-bit, Stage 8 = assigned-index store.
+
+Capacity: the bit block must fit VMEM: n_pad * L_pad bytes (int8).
+For larger graphs the vertex set is partitioned across devices and the
+parallel-rounds path (repro.core.rounds) stitches partitions together;
+within a partition this kernel is the inner engine.
+
+Grid: one program per edge block, sequential ("arbitrary") so the VMEM
+scratch carries state across blocks — the stream order is preserved.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(edges_ref, w_ref, thr_ref, assigned_ref, mb_out_ref, mb, *, block_e: int):
+    b = pl.program_id(0)
+    nblocks = pl.num_programs(0)
+
+    @pl.when(b == 0)
+    def _init():
+        mb[...] = jnp.zeros_like(mb)
+
+    L_pad = mb.shape[1]
+    thr = thr_ref[0, :]  # [L_pad] f32; padding lanes hold +inf
+    lane = jax.lax.broadcasted_iota(jnp.int32, (L_pad,), 0)
+
+    def body(i, _):
+        # Stage 1: unpack edge, compute row addresses
+        u = edges_ref[i, 0]
+        v = edges_ref[i, 1]
+        w = w_ref[i, 0]
+        # Stage 2-3: row loads (BRAM -> register in the paper)
+        mbu = pl.load(mb, (pl.ds(u, 1), slice(None)))[0]  # [L_pad] i8
+        mbv = pl.load(mb, (pl.ds(v, 1), slice(None)))[0]
+        # Stage 4: eligibility te[i] = w >= (1+eps)^i  (+inf pads -> False)
+        te = (w >= thr) & (u != v)
+        # Stage 5: compute the matchings
+        add = te & (mbu == 0) & (mbv == 0)
+        addi = add.astype(jnp.int8)
+        # Stage 6: write u/v bits back (v second: self-loop-safe, add=0 there)
+        pl.store(mb, (pl.ds(u, 1), slice(None)), (mbu | addi)[None])
+        mbv2 = pl.load(mb, (pl.ds(v, 1), slice(None)))[0]
+        pl.store(mb, (pl.ds(v, 1), slice(None)), (mbv2 | addi)[None])
+        # Stage 7: highest set bit
+        idx = jnp.max(jnp.where(add, lane, -1))
+        # Stage 8: emit assignment
+        assigned_ref[i, 0] = idx
+        return 0
+
+    jax.lax.fori_loop(0, block_e, body, 0, unroll=False)
+
+    @pl.when(b == nblocks - 1)
+    def _flush():
+        mb_out_ref[...] = mb[...]
+
+
+def substream_match_pallas(
+    edges: jax.Array,  # int32 [m_pad, 2]
+    weights: jax.Array,  # f32/bf16 [m_pad, 1]; <= 0 marks padding edges
+    thresholds: jax.Array,  # f32 [1, L_pad]; +inf in padding lanes
+    n_pad: int,
+    block_e: int = 1024,
+    interpret: bool = True,
+):
+    """Raw pallas_call wrapper. See ops.substream_match for the typed API."""
+    m_pad = edges.shape[0]
+    assert m_pad % block_e == 0, (m_pad, block_e)
+    L_pad = thresholds.shape[1]
+    nblocks = m_pad // block_e
+    grid = (nblocks,)
+
+    kernel = functools.partial(_kernel, block_e=block_e)
+    assigned, mb = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_e, 2), lambda b: (b, 0)),  # edge block (pipelined)
+            pl.BlockSpec((block_e, 1), lambda b: (b, 0)),  # weight block
+            pl.BlockSpec((1, L_pad), lambda b: (0, 0)),  # thresholds (resident)
+        ],
+        out_specs=[
+            pl.BlockSpec((block_e, 1), lambda b: (b, 0)),
+            pl.BlockSpec((n_pad, L_pad), lambda b: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m_pad, 1), jnp.int32),
+            jax.ShapeDtypeStruct((n_pad, L_pad), jnp.int8),
+        ],
+        scratch_shapes=[pltpu.VMEM((n_pad, L_pad), jnp.int8)],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",),
+        ),
+    )(edges, weights.astype(jnp.float32), thresholds)
+    return assigned[:, 0], mb

@@ -1,0 +1,65 @@
+"""Typed / padded entry point for the substream_match Pallas kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import EdgeStream, MatchingResult, SubstreamConfig
+from repro.kernels.substream_match import kernel as _kernel
+
+# v5e VMEM is ~128 MiB/core? No — ~16 MiB usable; leave headroom for the
+# edge-block double buffers.
+VMEM_BIT_BUDGET = 12 * 2**20  # bytes for the matching-bit block
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+def vmem_plan(n: int, L: int) -> tuple[int, int, int]:
+    """(n_pad, L_pad, bytes) of the VMEM matching-bit block."""
+    L_pad = _round_up(max(L, 1), 128)
+    n_pad = _round_up(max(n, 1), 8)
+    return n_pad, L_pad, n_pad * L_pad
+
+
+@partial(jax.jit, static_argnames=("cfg", "block_e", "interpret"))
+def substream_match(
+    stream: EdgeStream,
+    cfg: SubstreamConfig,
+    block_e: int = 1024,
+    interpret: bool = True,
+) -> MatchingResult:
+    """Run Part 1 on the given stream order via the Pallas kernel.
+
+    Raises at trace time if the bit block exceeds the VMEM budget — at that
+    size the caller must vertex-partition (core.rounds) instead.
+    """
+    n_pad, L_pad, nbytes = vmem_plan(cfg.n, cfg.L)
+    if nbytes > VMEM_BIT_BUDGET:
+        raise ValueError(
+            f"matching-bit block {nbytes/2**20:.1f} MiB > VMEM budget; "
+            f"use repro.core.rounds with vertex partitioning"
+        )
+    m = stream.num_edges
+    m_pad = _round_up(m, block_e)
+    pad = m_pad - m
+
+    edges = jnp.stack([stream.src, stream.dst], axis=1).astype(jnp.int32)
+    # invalid edges -> weight 0 (< every threshold, since thresholds >= 1)
+    w = jnp.where(stream.valid, stream.weight.astype(jnp.float32), 0.0)
+    if pad:
+        edges = jnp.concatenate([edges, jnp.zeros((pad, 2), jnp.int32)])
+        w = jnp.concatenate([w, jnp.zeros((pad,), jnp.float32)])
+    thr = cfg.thresholds()
+    thr_pad = jnp.full((1, L_pad), jnp.inf, jnp.float32).at[0, : cfg.L].set(thr)
+
+    assigned, mb = _kernel.substream_match_pallas(
+        edges, w[:, None], thr_pad, n_pad, block_e=block_e, interpret=interpret
+    )
+    return MatchingResult(
+        assigned=assigned[:m], mb=mb[: cfg.n, : cfg.L].astype(bool)
+    )

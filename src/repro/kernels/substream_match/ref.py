@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for the substream_match Pallas kernel.
+
+Semantics = Listing 1 Part 1 over the edge order given (the caller is
+responsible for pre-sorting into the blocked lexicographic order — the
+kernel processes edges exactly in the order it receives them, like the
+FPGA pipeline processes the merged stream).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def substream_match_ref(
+    src: jax.Array,  # int32 [m]
+    dst: jax.Array,  # int32 [m]
+    weight: jax.Array,  # float [m]; <= 0 encodes padding/invalid
+    thresholds: jax.Array,  # float32 [L]
+    n: int,
+):
+    """Returns (assigned int32 [m], mb int8 [n, L])."""
+    L = thresholds.shape[0]
+
+    def step(mb, e):
+        u, v, w = e
+        u = u.astype(jnp.int32)
+        v = v.astype(jnp.int32)
+        te = (w.astype(jnp.float32) >= thresholds) & (u != v)
+        mbu = mb[u]
+        mbv = mb[v]
+        add = te & (mbu == 0) & (mbv == 0)
+        addi = add.astype(jnp.int8)
+        mb = mb.at[u].set(mbu | addi)
+        mb = mb.at[v].set(mb[v] | addi)
+        idx = jnp.where(
+            add, jax.lax.broadcasted_iota(jnp.int32, add.shape, 0), -1
+        ).max()
+        return mb, idx
+
+    mb0 = jnp.zeros((n, L), jnp.int8)
+    mb, assigned = jax.lax.scan(step, mb0, (src, dst, weight))
+    return assigned, mb

@@ -1,0 +1,186 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) on the
+production meshes and extract roofline terms from the compiled artifact.
+
+MUST be run as its own process (the two lines above must execute before
+any jax import anywhere): ``PYTHONPATH=src python -m repro.launch.dryrun``.
+
+Outputs one JSON record per (arch, shape, mesh) to --out (resumable: cells
+already present are skipped).
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import NamedSharding  # noqa: E402
+
+from repro.configs import all_arch_ids, get_arch  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.steps import build_step  # noqa: E402
+from repro.launch.roofline import (  # noqa: E402
+    collective_bytes_from_hlo,
+    roofline_terms,
+    useful_flops,
+)
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool) -> dict:
+    arch = get_arch(arch_id)
+    shape = arch.shapes[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    # LM cells: scanned program (fast compile; exact memory accounting),
+    # flops/bytes/collectives from per-component compiles (components.py).
+    # GNN/recsys: whole-program with unrolled chunk loops (exact costs).
+    use_components = arch.family == "lm"
+    # chunked-GNN cells: unrolling 2x16 chunks x 12 layers x grad exceeds
+    # the single-core compile budget; run scans and apply the known
+    # trip-count correction (the chunk loops dominate >99% of this model's
+    # work, so multiplying the whole-program cost by the trip count is a
+    # tight upper bound; flagged in the record).
+    scan_corr = 1
+    if arch.family == "gnn":
+        from repro.launch.steps import gnn_batch_dims, gnn_shape_config
+
+        gcfg = gnn_shape_config(arch, shape)
+        if gcfg.edge_chunk:
+            _, e_pad = gnn_batch_dims(shape, gcfg.edge_chunk)
+            scan_corr = e_pad // gcfg.edge_chunk
+    bs = build_step(arch, shape, multi_pod=multi_pod,
+                    unroll=(not use_components) and scan_corr == 1)
+    as_shard = lambda t: jax.tree_util.tree_map(
+        lambda p: NamedSharding(mesh, p), t,
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec),
+    )
+    in_shardings = as_shard(bs.arg_pspecs)
+    out_shardings = as_shard(bs.out_pspecs) if bs.out_pspecs is not None else None
+    t0 = time.time()
+    with mesh:
+        lowered = jax.jit(
+            bs.fn,
+            in_shardings=in_shardings,
+            out_shardings=out_shardings,
+            donate_argnums=bs.donate,
+        ).lower(*bs.arg_specs)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    rec = {
+        "arch": arch_id,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": n_chips,
+        "kind": bs.kind,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+    }
+    try:
+        ma = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+        }
+        rec["memory"]["peak_per_device"] = (
+            rec["memory"]["argument_bytes"]
+            + rec["memory"]["output_bytes"]
+            + rec["memory"]["temp_bytes"]
+            - rec["memory"]["alias_bytes"]
+        )
+    except Exception as e:  # pragma: no cover
+        rec["memory"] = {"error": str(e)}
+    if use_components:
+        from repro.launch.components import lm_component_costs
+
+        comp = lm_component_costs(arch, shape, mesh, multi_pod)
+        rec["cost_method"] = "component"
+        rec["flops_per_device"] = comp["total"]["flops"]
+        rec["bytes_per_device"] = comp["total"]["bytes"]
+        rec["collectives"] = {
+            "total_bytes_per_device": comp["total"]["collective_bytes"]
+        }
+        rec["parts"] = comp["parts"]
+    else:
+        rec["cost_method"] = (
+            "whole-program" if scan_corr == 1
+            else f"whole-program-scan-corrected-x{scan_corr}"
+        )
+        ca = compiled.cost_analysis() or {}
+        rec["flops_per_device"] = float(ca.get("flops", -1)) * scan_corr
+        rec["bytes_per_device"] = float(ca.get("bytes accessed", -1)) * scan_corr
+        hlo = compiled.as_text()
+        rec["collectives"] = collective_bytes_from_hlo(hlo)
+        if scan_corr > 1:
+            rec["collectives"] = {
+                k: (v * scan_corr if isinstance(v, float) else v)
+                for k, v in rec["collectives"].items()
+            }
+    rec["model_flops"] = useful_flops(arch, shape)
+    rec["roofline"] = roofline_terms(rec)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="single arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="single shape name")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="dryrun_results.json")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    results: dict[str, dict] = {}
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+
+    arch_ids = [args.arch] if args.arch else all_arch_ids()
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    n_fail = 0
+    for arch_id in arch_ids:
+        arch = get_arch(arch_id)
+        shape_names = [args.shape] if args.shape else list(arch.shapes)
+        for shape_name in shape_names:
+            for multi_pod in meshes:
+                key = f"{arch_id}|{shape_name}|{'multi' if multi_pod else 'single'}"
+                if key in results and not args.force and "error" not in results[key]:
+                    print(f"skip {key} (cached)", flush=True)
+                    continue
+                print(f"=== {key}", flush=True)
+                try:
+                    rec = run_cell(arch_id, shape_name, multi_pod)
+                    print(
+                        f"    ok lower={rec['lower_s']}s compile={rec['compile_s']}s "
+                        f"flops/dev={rec['flops_per_device']:.3e} "
+                        f"peak/dev={rec.get('memory', {}).get('peak_per_device', -1)/2**30:.2f}GiB",
+                        flush=True,
+                    )
+                except Exception as e:
+                    n_fail += 1
+                    rec = {
+                        "arch": arch_id,
+                        "shape": shape_name,
+                        "mesh": "2x16x16" if multi_pod else "16x16",
+                        "error": f"{type(e).__name__}: {e}",
+                        "traceback": traceback.format_exc()[-2000:],
+                    }
+                    print(f"    FAIL {rec['error'][:200]}", flush=True)
+                results[key] = rec
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+    print(f"done; {n_fail} failures", flush=True)
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Production meshes.
+
+Single pod: (data=16, model=16) — 256 chips, the v5e pod slice the roofline
+table targets. Multi-pod: (pod=2, data=16, model=16) — 512 chips; the "pod"
+axis is the slow (DCN) dimension, so only batch/DP traffic crosses it.
+
+Functions, not module constants: importing this module must never touch
+jax device state (smoke tests see 1 device; only dryrun forces 512).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1, pod: int = 0):
+    """Small mesh over however many (host) devices exist — tests/examples."""
+    if pod:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def mesh_axis_size(mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.shape else 1

@@ -1,0 +1,491 @@
+"""(arch x shape) -> jit-able step functions + shardings.
+
+This is the seam between the model zoo and the production mesh: for every
+architecture family it builds
+  * ``state_specs``  — ArraySpec trees for params (+ AdamW state),
+  * ``input_specs``  — ShapeDtypeStruct stand-ins for one step's inputs,
+  * ``rules``        — logical-axis -> mesh-axis map (DP/TP/EP/SP/FSDP),
+  * ``step_fn``      — train_step / prefill / decode / serve functions.
+
+The dry-run lowers these against the production mesh; trainers jit them
+against whatever mesh exists.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.registry import ArchSpec, ShapeSpec, sampled_subgraph_sizes
+from repro.distributed.sharding import sharding_rules
+from repro.models import bert4rec as b4r
+from repro.models import transformer as tfm
+from repro.models.param import ArraySpec, abstract_params, pspecs
+from repro.optim import AdamWConfig, adamw_init_specs, adamw_update
+
+
+def _gnn_module(arch: ArchSpec):
+    import importlib
+
+    return importlib.import_module(f"repro.models.{arch.gnn_model}")
+
+
+def _rup(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+# --------------------------------------------------------------- rules
+
+
+def arch_rules(arch: ArchSpec, shape: ShapeSpec, multi_pod: bool) -> dict:
+    dp = ("pod", "data") if multi_pod else ("data",)
+    model = "model"
+    msize = 16
+    rules: dict[str, Any] = {
+        "dp": dp,
+        "layers": None,
+        "vocab": model,
+        "mlp": model,
+        "rows": model,
+        "seq": None,
+        "nodes": None,
+        "edges": dp,
+        "cache_batch": dp,
+    }
+    if arch.family == "lm":
+        cfg: tfm.TransformerConfig = arch.config
+        rules["embed"] = "data"  # FSDP: d_model rows over data
+        # jit input shardings need divisibility: minicpm's 36 heads stay
+        # replicated (documented inefficiency; see EXPERIMENTS §Roofline)
+        rules["heads"] = model if cfg.n_heads % msize == 0 else None
+        rules["kv_heads"] = model if cfg.n_kv % msize == 0 else None
+        # heads-sharded archs: feature-dim boundary sharding beats
+        # seq-sharding (grok layer: 35.3 -> ~21 GiB collectives, carry
+        # stays 1/16-sized; EXPERIMENTS §Perf A-1). replicated-head archs
+        # keep seq-sharding: it carries their seq-parallel attention.
+        sharded_heads = cfg.n_heads % msize == 0
+        rules["model_seq"] = None if sharded_heads else model
+        rules["model_d"] = model if sharded_heads else None
+        rules["expert"] = model if cfg.expert_sharding == "ep" else None
+        rules["expert_mlp"] = model if cfg.expert_sharding == "tp" else None
+        if shape.kind in ("decode", "prefill"):
+            if shape.kind == "decode" and shape.global_batch == 1:
+                rules["cache_batch"] = None
+                rules["seq"] = dp + (model,) if rules["kv_heads"] is None else dp
+            elif rules["kv_heads"] is None:
+                rules["seq"] = model
+    elif arch.family == "gnn":
+        big = shape.n_nodes > 100_000
+        # gin's node state (2.4M x 64 f32 = 627 MB) fits replicated: pure
+        # edge-DP with an all-reduce per layer beats gathers (§Perf C)
+        if shape.name == "ogb_products":
+            rules["nodes"] = None if arch.id == "gin-tu" else ("data", model)
+        else:
+            rules["nodes"] = model if big else None
+        rules["edges"] = dp + (model,) if big else dp
+        rules["embed"] = None
+    else:  # recsys
+        rules["embed"] = None
+        rules["heads"] = None
+        rules["seq"] = None
+        if shape.batch and shape.batch < 16:  # retrieval: a single query
+            rules["dp"] = None
+    return rules
+
+
+# --------------------------------------------------------------- LM
+
+
+def _lm_shape_overrides(cfg: tfm.TransformerConfig, shape: ShapeSpec,
+                        unroll: bool = False, multi_pod: bool = False):
+    # replicated-head archs (36 % 16 != 0) run sequence-parallel attention:
+    # `attn_par` query chunks batched into one einsum, sharded over model
+    sharded_heads = cfg.n_heads % 16 == 0
+    par = 1 if sharded_heads else 16
+    # MoE dispatch groups = DP degree (per-shard-local dispatch); decode
+    # batches may be smaller than DP
+    dp_size = 32 if multi_pod else 16
+    groups = min(dp_size, shape.global_batch) if cfg.is_moe else 1
+    if shape.kind == "train":
+        return dataclasses.replace(
+            cfg, attn_chunk=512 if sharded_heads else 256, attn_par=par,
+            loss_chunk=256, unroll=unroll, moe_groups=groups,
+        )
+    if shape.kind == "prefill":
+        return dataclasses.replace(
+            cfg, attn_chunk=2048 if sharded_heads else 256, attn_par=par,
+            loss_chunk=512, remat=True, unroll=unroll, moe_groups=groups,
+        )
+    return dataclasses.replace(cfg, unroll=unroll, moe_groups=groups)
+
+
+def lm_state_specs(arch: ArchSpec, opt_cfg: AdamWConfig):
+    pspec_tree = tfm.param_specs(arch.config)
+    return pspec_tree, adamw_init_specs(pspec_tree, opt_cfg)
+
+
+def lm_input_specs(arch: ArchSpec, shape: ShapeSpec):
+    cfg: tfm.TransformerConfig = arch.config
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return {"tokens": ArraySpec((B, S), ("dp", None), jnp.int32, "zeros")}
+    if shape.kind == "prefill":
+        return {"tokens": ArraySpec((B, S), ("dp", None), jnp.int32, "zeros")}
+    if shape.kind == "decode":
+        cache = tfm.kv_cache_specs(cfg, B, S)
+        cache = jax.tree_util.tree_map(
+            lambda s: ArraySpec(
+                s.shape, ("layers", "cache_batch", "seq", "kv_heads", None),
+                s.dtype, "zeros",
+            ),
+            cache,
+            is_leaf=lambda x: isinstance(x, ArraySpec),
+        )
+        return {
+            "cache": cache,
+            "token": ArraySpec((B,), ("cache_batch",), jnp.int32, "zeros"),
+        }
+    raise ValueError(shape.kind)
+
+
+def make_lm_train_step(arch: ArchSpec, shape: ShapeSpec, opt_cfg: AdamWConfig,
+                       unroll: bool = False, multi_pod: bool = False):
+    cfg = _lm_shape_overrides(arch.config, shape, unroll, multi_pod)
+
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(lambda p: tfm.loss_fn(p, batch["tokens"], cfg))(
+            params
+        )
+        params, opt_state, gnorm = adamw_update(
+            params, grads, opt_state, opt_cfg.lr, opt_cfg
+        )
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    return step
+
+
+def make_lm_prefill(arch: ArchSpec, shape: ShapeSpec, unroll: bool = False,
+                    multi_pod: bool = False):
+    cfg = _lm_shape_overrides(arch.config, shape, unroll, multi_pod)
+
+    def step(params, batch):
+        cache, last_h = tfm.prefill(params, batch["tokens"], cfg)
+        logits = (last_h @ params["lm_head"]).astype(jnp.float32)
+        return cache, logits
+
+    return step
+
+
+def make_lm_decode(arch: ArchSpec, shape: ShapeSpec, unroll: bool = False,
+                   multi_pod: bool = False):
+    cfg = _lm_shape_overrides(arch.config, shape, unroll, multi_pod)
+    S = shape.seq_len
+
+    def step(params, batch):
+        cache, token = batch["cache"], batch["token"]
+        cache_len = jnp.int32(S - 1)
+        logits, (knew, vnew) = tfm.decode_step(params, cache, token, cache_len, cfg)
+        # commit the new KV at position cache_len (donated buffers in prod)
+        k = jax.lax.dynamic_update_slice(
+            cache["k"], knew.astype(cache["k"].dtype), (0, 0, S - 1, 0, 0)
+        )
+        v = jax.lax.dynamic_update_slice(
+            cache["v"], vnew.astype(cache["v"].dtype), (0, 0, S - 1, 0, 0)
+        )
+        return logits, {"k": k, "v": v}
+
+    return step
+
+
+# --------------------------------------------------------------- GNN
+
+N_SRC_BLOCKS = 16  # paper-style blocking: one node block resident/chunk
+
+
+def gnn_edge_chunk(arch: ArchSpec, shape: ShapeSpec) -> int:
+    # only the irrep-heavy model needs chunked message passing; everything
+    # else fits [E_shard, d] comfortably (see DESIGN.md memory notes).
+    # equiformer x products runs src-blocked (§Perf B): chunk = E / 16.
+    if arch.id == "equiformer-v2" and shape.name == "ogb_products":
+        e_pad = _rup(shape.n_edges, N_SRC_BLOCKS * 4096)
+        return e_pad // N_SRC_BLOCKS
+    return 0
+
+
+def gnn_shape_config(arch: ArchSpec, shape: ShapeSpec, unroll: bool = False):
+    cfg = arch.config
+    over = dict(edge_chunk=gnn_edge_chunk(arch, shape), unroll=unroll)
+    if arch.id == "equiformer-v2" and shape.name == "ogb_products":
+        over["src_blocked"] = True
+    if shape.name == "molecule":
+        over["d_in"] = 16
+    else:
+        over["d_in"] = shape.d_feat
+    if arch.id == "gin-tu" and shape.n_classes:
+        over["n_classes"] = shape.n_classes
+    return dataclasses.replace(cfg, **over)
+
+
+def gnn_batch_dims(shape: ShapeSpec, chunk: int = 0):
+    """(N_pad, E_pad) static sizes for the GraphBatch."""
+    if shape.name == "minibatch_lg":
+        n, e = sampled_subgraph_sizes(shape)
+    elif shape.name == "molecule":
+        n = shape.n_nodes * shape.batch_graphs
+        e = shape.n_edges * shape.batch_graphs
+    else:
+        n, e = shape.n_nodes, shape.n_edges
+    n = _rup(n, 256)
+    e = _rup(e, chunk if chunk else 256)
+    if chunk:
+        e = _rup(e, chunk)
+    return n, e
+
+
+def gnn_input_specs(arch: ArchSpec, shape: ShapeSpec):
+    cfg = gnn_shape_config(arch, shape)
+    N, E = gnn_batch_dims(shape, cfg.edge_chunk)
+    label_like = (
+        ArraySpec((N,), ("nodes",), jnp.int32, "zeros")
+        if arch.id == "gin-tu"
+        else ArraySpec((N, cfg.d_out), ("nodes", None), jnp.float32, "zeros")
+    )
+    specs = {
+        "node_feats": ArraySpec((N, cfg.d_in), ("nodes", None), jnp.float32),
+        "src": ArraySpec((E,), ("edges",), jnp.int32, "zeros"),
+        "dst": ArraySpec((E,), ("edges",), jnp.int32, "zeros"),
+        "edge_mask": ArraySpec((E,), ("edges",), jnp.bool_, "zeros"),
+        "node_mask": ArraySpec((N,), ("nodes",), jnp.bool_, "zeros"),
+        "labels": label_like,
+        "label_mask": ArraySpec((N,), ("nodes",), jnp.bool_, "zeros"),
+    }
+    if arch.id in ("egnn", "equiformer-v2", "meshgraphnet"):
+        specs["coords"] = ArraySpec((N, 3), ("nodes", None), jnp.float32)
+    return specs
+
+
+def gnn_state_specs(arch: ArchSpec, shape: ShapeSpec, opt_cfg: AdamWConfig):
+    mod = _gnn_module(arch)
+    cfg = gnn_shape_config(arch, shape)
+    pspec_tree = mod.param_specs(cfg)
+    return pspec_tree, adamw_init_specs(pspec_tree, opt_cfg)
+
+
+def make_gnn_train_step(arch: ArchSpec, shape: ShapeSpec, opt_cfg: AdamWConfig,
+                        unroll: bool = False):
+    mod = _gnn_module(arch)
+    cfg = gnn_shape_config(arch, shape, unroll)
+    from repro.models.gnn_common import GraphBatch
+
+    def step(params, opt_state, batch):
+        gb = GraphBatch(
+            node_feats=batch["node_feats"],
+            src=batch["src"],
+            dst=batch["dst"],
+            edge_mask=batch["edge_mask"],
+            node_mask=batch["node_mask"],
+            coords=batch.get("coords"),
+            labels=batch["labels"],
+            label_mask=batch["label_mask"],
+        )
+        loss, grads = jax.value_and_grad(lambda p: mod.loss_fn(p, gb, cfg))(params)
+        params, opt_state, gnorm = adamw_update(
+            params, grads, opt_state, opt_cfg.lr, opt_cfg
+        )
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    return step
+
+
+# --------------------------------------------------------------- recsys
+
+
+def recsys_input_specs(arch: ArchSpec, shape: ShapeSpec):
+    cfg: b4r.Bert4RecConfig = arch.config
+    B = shape.batch
+    base = {
+        "item_ids": ArraySpec((B, cfg.seq_len), ("dp", None), jnp.int32, "zeros"),
+        "context_ids": ArraySpec((B, cfg.n_context), ("dp", None), jnp.int32, "zeros"),
+    }
+    if shape.kind == "train":
+        base |= {
+            "mask_pos": ArraySpec((B, cfg.n_mask), ("dp", None), jnp.int32, "zeros"),
+            "labels": ArraySpec((B, cfg.n_mask), ("dp", None), jnp.int32, "zeros"),
+            "negatives": ArraySpec((cfg.n_negatives,), (None,), jnp.int32, "zeros"),
+            "neg_logq": ArraySpec((cfg.n_negatives,), (None,), jnp.float32, "zeros"),
+        }
+    if shape.kind == "retrieval":
+        base |= {
+            "candidates": ArraySpec((shape.n_candidates,), ("rows",), jnp.int32, "zeros"),
+        }
+    return base
+
+
+def recsys_state_specs(arch: ArchSpec, opt_cfg: AdamWConfig):
+    pspec_tree = b4r.param_specs(arch.config)
+    return pspec_tree, adamw_init_specs(pspec_tree, opt_cfg)
+
+
+def sharded_topk(scores, k: int, shards: int = 16):
+    """Two-stage top-k that never gathers the full score row."""
+    B, V = scores.shape
+    assert V % shards == 0
+    s = scores.reshape(B, shards, V // shards)
+    v1, i1 = jax.lax.top_k(s, k)  # [B, shards, k] (local per shard)
+    base = (jnp.arange(shards) * (V // shards))[None, :, None]
+    gidx = (i1 + base).reshape(B, shards * k)
+    v2, i2 = jax.lax.top_k(v1.reshape(B, shards * k), k)
+    return v2, jnp.take_along_axis(gidx, i2, axis=1)
+
+
+def make_recsys_step(arch: ArchSpec, shape: ShapeSpec, opt_cfg: AdamWConfig,
+                     unroll: bool = False):
+    cfg: b4r.Bert4RecConfig = arch.config
+    if shape.kind == "train":
+
+        def step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(lambda p: b4r.loss_fn(p, batch, cfg))(params)
+            params, opt_state, gnorm = adamw_update(
+                params, grads, opt_state, opt_cfg.lr, opt_cfg
+            )
+            return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+        return step
+
+    if shape.kind == "retrieval":
+
+        def step(params, batch):
+            scores = b4r.score_candidates(
+                params, batch["item_ids"], batch["context_ids"], batch["candidates"], cfg
+            )
+            return sharded_topk(scores, k=100)
+
+        return step
+
+    # serve_scores: chunked scoring against the full table + 2-stage top-k
+    B = shape.batch
+    user_chunk = min(B, 4096)
+
+    def step(params, batch):
+        nb = B // user_chunk
+        ids = batch["item_ids"].reshape(nb, user_chunk, cfg.seq_len)
+        ctx = batch["context_ids"].reshape(nb, user_chunk, cfg.n_context)
+
+        def one(_, xs):
+            i, c = xs
+            scores = b4r.serve_scores(params, i, c, cfg)
+            return None, sharded_topk(scores, k=100)
+
+        from repro.models.gnn_common import loop_chunks
+
+        _, (vals, idxs) = loop_chunks(one, None, (ids, ctx), unroll)
+        return vals.reshape(B, -1), idxs.reshape(B, -1)
+
+    return step
+
+
+# --------------------------------------------------------------- assembly
+
+
+def _p(rules: dict, *logical) -> P:
+    """Resolve logical axis names to a PartitionSpec under `rules`."""
+    axes = []
+    used = set()
+    for name in logical:
+        ax = rules.get(name) if name is not None else None
+        key = tuple(ax) if isinstance(ax, (tuple, list)) else (ax,)
+        if ax is not None and any(k in used for k in key):
+            ax = None
+        if ax is not None:
+            used.update(key)
+        axes.append(ax)
+    return P(*axes)
+
+
+@dataclasses.dataclass
+class BuiltStep:
+    fn: Any  # (state..., batch) -> outputs
+    arg_specs: tuple  # ShapeDtypeStruct pytrees, in call order
+    arg_pspecs: tuple  # matching PartitionSpec pytrees
+    out_pspecs: Any  # PartitionSpec pytree for outputs (or None -> infer)
+    donate: tuple  # argnums to donate
+    kind: str
+    rules: dict
+
+
+def default_opt_cfg(arch: ArchSpec) -> AdamWConfig:
+    """>100B params: bf16 Adam moments (halves optimizer HBM; §Perf A-3)."""
+    if arch.family == "lm" and arch.config.param_count() > 100e9:
+        return AdamWConfig(moment_dtype=jnp.bfloat16)
+    return AdamWConfig()
+
+
+def build_step(arch: ArchSpec, shape: ShapeSpec, *, multi_pod: bool = False,
+               opt_cfg: AdamWConfig | None = None, unroll: bool = False) -> BuiltStep:
+    opt_cfg = opt_cfg or default_opt_cfg(arch)
+    rules = arch_rules(arch, shape, multi_pod)
+
+    def specs_of(tree):
+        return abstract_params(tree), pspecs(tree, rules)
+
+    out_pspecs = None
+    donate: tuple = ()
+    metrics_ps = {"loss": P(), "grad_norm": P()}
+    if arch.family == "lm":
+        inputs = lm_input_specs(arch, shape)
+        if shape.kind == "train":
+            p_t, o_t = lm_state_specs(arch, opt_cfg)
+            fn = make_lm_train_step(arch, shape, opt_cfg, unroll, multi_pod)
+            trees = (p_t, o_t, inputs)
+            out_pspecs = (pspecs(p_t, rules), pspecs(o_t, rules), metrics_ps)
+            donate = (0, 1)
+        elif shape.kind == "prefill":
+            p_t = tfm.param_specs(arch.config)
+            fn = make_lm_prefill(arch, shape, unroll, multi_pod)
+            trees = (p_t, inputs)
+            cache_t = lm_input_specs(arch, dataclasses.replace(
+                shape, kind="decode"))["cache"]
+            out_pspecs = (pspecs(cache_t, rules), _p(rules, "dp", "vocab"))
+        else:
+            p_t = tfm.param_specs(arch.config)
+            fn = make_lm_decode(arch, shape, unroll, multi_pod)
+            trees = (p_t, inputs)
+            cache_ps = pspecs(inputs["cache"], rules)
+            out_pspecs = (_p(rules, "cache_batch", "vocab"), cache_ps)
+            donate = (1,)
+    elif arch.family == "gnn":
+        p_t, o_t = gnn_state_specs(arch, shape, opt_cfg)
+        inputs = gnn_input_specs(arch, shape)
+        fn = make_gnn_train_step(arch, shape, opt_cfg, unroll)
+        trees = (p_t, o_t, inputs)
+        out_pspecs = (pspecs(p_t, rules), pspecs(o_t, rules), metrics_ps)
+        donate = (0, 1)
+    else:
+        inputs = recsys_input_specs(arch, shape)
+        if shape.kind == "train":
+            p_t, o_t = recsys_state_specs(arch, opt_cfg)
+            fn = make_recsys_step(arch, shape, opt_cfg, unroll)
+            trees = (p_t, o_t, inputs)
+            out_pspecs = (pspecs(p_t, rules), pspecs(o_t, rules), metrics_ps)
+            donate = (0, 1)
+        else:
+            p_t = b4r.param_specs(arch.config)
+            fn = make_recsys_step(arch, shape, opt_cfg, unroll)
+            trees = (p_t, inputs)
+            out_pspecs = (_p(rules, "dp", None), _p(rules, "dp", None))
+
+    arg_specs, arg_pspecs = zip(*[specs_of(t) for t in trees])
+
+    def wrapped(*args):
+        with sharding_rules(rules):
+            return fn(*args)
+
+    return BuiltStep(
+        fn=wrapped, arg_specs=tuple(arg_specs), arg_pspecs=tuple(arg_pspecs),
+        out_pspecs=out_pspecs, donate=donate, kind=shape.kind, rules=rules,
+    )

@@ -1,0 +1,51 @@
+"""EmbeddingBag for JAX — gather + segment-reduce (no native op exists).
+
+table [V, D] row-shardable over the model axis; lookups via jnp.take.
+Bags are (ids [B, bag], weights?) -> pooled [B, D].
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_bag(table, ids, mode: str = "sum", weights=None, valid=None):
+    """table [V, D]; ids int32 [B, bag]; valid bool [B, bag] masks padding."""
+    B, bag = ids.shape
+    emb = jnp.take(table, ids.reshape(-1), axis=0).reshape(B, bag, -1)
+    if weights is not None:
+        emb = emb * weights[..., None].astype(emb.dtype)
+    if valid is not None:
+        emb = jnp.where(valid[..., None], emb, 0)
+    if mode == "sum":
+        return emb.sum(axis=1)
+    if mode == "mean":
+        denom = (
+            valid.sum(axis=1, keepdims=True).astype(emb.dtype)
+            if valid is not None
+            else jnp.full((B, 1), bag, emb.dtype)
+        )
+        return emb.sum(axis=1) / jnp.maximum(denom, 1)
+    if mode == "max":
+        neg = jnp.finfo(emb.dtype).min
+        if valid is not None:
+            emb = jnp.where(valid[..., None], emb, neg)
+        return emb.max(axis=1)
+    raise ValueError(mode)
+
+
+def embedding_bag_ragged(table, flat_ids, segment_ids, num_bags: int,
+                         mode: str = "sum"):
+    """Ragged variant: flat_ids [T], segment_ids [T] -> [num_bags, D]."""
+    emb = jnp.take(table, flat_ids, axis=0)
+    if mode == "sum":
+        return jax.ops.segment_sum(emb, segment_ids, num_segments=num_bags)
+    if mode == "mean":
+        s = jax.ops.segment_sum(emb, segment_ids, num_segments=num_bags)
+        c = jax.ops.segment_sum(
+            jnp.ones_like(flat_ids, emb.dtype), segment_ids, num_segments=num_bags
+        )
+        return s / jnp.maximum(c[:, None], 1)
+    if mode == "max":
+        return jax.ops.segment_max(emb, segment_ids, num_segments=num_bags)
+    raise ValueError(mode)

@@ -1,0 +1,117 @@
+"""Shared GNN machinery: flat GraphBatch + MLP + chunked message passing.
+
+All four GNN shapes reduce to one flat representation:
+  * full-batch graphs: one graph, masks all-true;
+  * sampled minibatch (fanout 15-10): the sampler's merged subgraph;
+  * batched small molecules: disjoint union, ``graph_ids`` for readout.
+
+JAX has no CSR SpMM — message passing is gather -> transform ->
+``segment_sum`` (see repro.graph.segment), with optional edge chunking
+(lax.scan) so multi-10M-edge graphs never materialize [E, d] at once.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.param import ArraySpec
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class GraphBatch:
+    node_feats: jax.Array  # [N, F] float
+    src: jax.Array  # [E] int32
+    dst: jax.Array  # [E] int32
+    edge_mask: jax.Array  # [E] bool
+    node_mask: jax.Array  # [N] bool
+    coords: Optional[jax.Array] = None  # [N, 3]
+    edge_feats: Optional[jax.Array] = None  # [E, Fe]
+    graph_ids: Optional[jax.Array] = None  # [N] int32 (batched readout)
+    labels: Optional[jax.Array] = None  # [N] int32 or [N/B, ...] float
+    label_mask: Optional[jax.Array] = None  # [N] or [B] bool
+
+    @property
+    def n(self) -> int:
+        return self.node_feats.shape[0]
+
+    @property
+    def e(self) -> int:
+        return self.src.shape[0]
+
+
+def mlp_specs(name_dims, dtype=jnp.float32, final_zeros: bool = False):
+    """[(d0, d1, d2, ...)] -> {wi, bi} specs. Logical axes: generic."""
+    specs = {}
+    dims = name_dims
+    for i in range(len(dims) - 1):
+        init = "zeros" if (final_zeros and i == len(dims) - 2) else "normal"
+        specs[f"w{i}"] = ArraySpec((dims[i], dims[i + 1]), (None, None), dtype, init)
+        specs[f"b{i}"] = ArraySpec((dims[i + 1],), (None,), dtype, "zeros")
+    return specs
+
+
+def mlp_apply(params, x, act=jax.nn.silu, layernorm: bool = False, eps=1e-5):
+    n = len([k for k in params if k.startswith("w")])
+    for i in range(n):
+        x = x @ params[f"w{i}"] + params[f"b{i}"]
+        if i < n - 1:
+            x = act(x)
+    if layernorm:
+        mu = x.mean(-1, keepdims=True)
+        var = ((x - mu) ** 2).mean(-1, keepdims=True)
+        x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return x
+
+
+def loop_chunks(body, carry, xs, unroll: bool):
+    """scan-or-python-loop over the leading axis of `xs` (a tuple tree).
+
+    Unrolled mode exists for the dry-run: XLA cost_analysis counts a
+    while-loop body once, so chunked message passing must be unrolled for
+    honest FLOP/byte roofline numbers.
+    """
+    if not unroll:
+        return jax.lax.scan(body, carry, xs)
+    n = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    outs = []
+    for i in range(n):
+        carry, o = body(carry, jax.tree_util.tree_map(lambda a: a[i], xs))
+        outs.append(o)
+    if outs and outs[0] is not None:
+        outs = jax.tree_util.tree_map(lambda *ys: jnp.stack(ys), *outs)
+    else:
+        outs = None
+    return carry, outs
+
+
+def chunked_edge_aggregate(msg_fn, src, dst, edge_mask, n_nodes: int,
+                           out_dim: int, edge_chunk: int = 0, dtype=jnp.float32,
+                           unroll: bool = False):
+    """sum_{e: dst(e)=v} msg_fn(e_indices) with optional chunking.
+
+    msg_fn(src_idx, dst_idx, mask) -> [chunk, out_dim] messages.
+    """
+    E = src.shape[0]
+    if not edge_chunk or E <= edge_chunk:
+        m = msg_fn(src, dst, edge_mask)
+        m = jnp.where(edge_mask[:, None], m, 0)
+        return jax.ops.segment_sum(m, dst, num_segments=n_nodes)
+    assert E % edge_chunk == 0, (E, edge_chunk)
+    nc = E // edge_chunk
+    s = src.reshape(nc, edge_chunk)
+    d = dst.reshape(nc, edge_chunk)
+    em = edge_mask.reshape(nc, edge_chunk)
+
+    def step(acc, xs):
+        si, di, mi = xs
+        m = msg_fn(si, di, mi)
+        m = jnp.where(mi[:, None], m, 0)
+        return acc + jax.ops.segment_sum(m, di, num_segments=n_nodes), None
+
+    acc0 = jnp.zeros((n_nodes, out_dim), dtype)
+    acc, _ = loop_chunks(step, acc0, (s, d, em), unroll)
+    return acc

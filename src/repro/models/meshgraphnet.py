@@ -1,0 +1,94 @@
+"""MeshGraphNet — arXiv:2010.03409. Encode-Process-Decode.
+
+Encoder: node/edge MLPs into latent d=128.
+Processor (15 steps): e' = e + MLP([e, h_src, h_dst]); h' = h + MLP([h, sum e']).
+Decoder: node MLP -> output (acceleration).
+All MLPs: 2 hidden layers + LayerNorm (paper setup). Assigned: n_layers=15,
+d_hidden=128, sum aggregator, mlp_layers=2.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.gnn_common import GraphBatch, mlp_specs, mlp_apply, loop_chunks
+
+
+@dataclasses.dataclass(frozen=True)
+class MGNConfig:
+    name: str = "meshgraphnet"
+    n_layers: int = 15
+    d_hidden: int = 128
+    d_in: int = 16
+    d_edge_in: int = 4  # rel coords (3) + norm (1)
+    d_out: int = 3
+    edge_chunk: int = 0
+    unroll: bool = False
+    dtype: Any = jnp.float32
+
+
+def param_specs(cfg: MGNConfig):
+    d = cfg.d_hidden
+    return {
+        "enc_node": mlp_specs((cfg.d_in, d, d, d), cfg.dtype),
+        "enc_edge": mlp_specs((cfg.d_edge_in, d, d, d), cfg.dtype),
+        "layers": [
+            {
+                "edge_mlp": mlp_specs((3 * d, d, d, d), cfg.dtype),
+                "node_mlp": mlp_specs((2 * d, d, d, d), cfg.dtype),
+            }
+            for _ in range(cfg.n_layers)
+        ],
+        "dec": mlp_specs((d, d, d, cfg.d_out), cfg.dtype),
+    }
+
+
+def _edge_feats(batch: GraphBatch, cfg: MGNConfig):
+    if batch.edge_feats is not None:
+        return batch.edge_feats.astype(cfg.dtype)
+    rel = batch.coords[batch.dst] - batch.coords[batch.src]
+    norm = jnp.linalg.norm(rel, axis=-1, keepdims=True)
+    return jnp.concatenate([rel, norm], -1).astype(cfg.dtype)
+
+
+def forward(params, batch: GraphBatch, cfg: MGNConfig):
+    h = mlp_apply(params["enc_node"], batch.node_feats.astype(cfg.dtype), layernorm=True)
+    e = mlp_apply(params["enc_edge"], _edge_feats(batch, cfg), layernorm=True)
+    h = jnp.where(batch.node_mask[:, None], h, 0)
+    e = jnp.where(batch.edge_mask[:, None], e, 0)
+    E = batch.e
+    chunk = cfg.edge_chunk or E
+    assert E % chunk == 0
+    nc = E // chunk
+    src_c = batch.src.reshape(nc, chunk)
+    dst_c = batch.dst.reshape(nc, chunk)
+    msk_c = batch.edge_mask.reshape(nc, chunk)
+
+    for lp in params["layers"]:
+        e_chunks = e.reshape(nc, chunk, cfg.d_hidden)
+
+        def step(agg, xs):
+            s, d_, mk, ec = xs
+            inp = jnp.concatenate([ec, h[s], h[d_]], -1)
+            e_new = ec + mlp_apply(lp["edge_mlp"], inp, layernorm=True)
+            e_new = jnp.where(mk[:, None], e_new, 0)
+            agg = agg + jax.ops.segment_sum(e_new, d_, num_segments=batch.n)
+            return agg, e_new
+
+        agg0 = jnp.zeros((batch.n, cfg.d_hidden), cfg.dtype)
+        agg, e_new = loop_chunks(step, agg0, (src_c, dst_c, msk_c, e_chunks), cfg.unroll)
+        e = e_new.reshape(E, cfg.d_hidden)
+        h = h + mlp_apply(lp["node_mlp"], jnp.concatenate([h, agg], -1), layernorm=True)
+        h = constrain(jnp.where(batch.node_mask[:, None], h, 0), "nodes", None)
+    return mlp_apply(params["dec"], h)
+
+
+def loss_fn(params, batch: GraphBatch, cfg: MGNConfig):
+    out = forward(params, batch, cfg).astype(jnp.float32)
+    err = (out - batch.labels.astype(jnp.float32)) ** 2
+    mask = batch.label_mask[:, None]
+    return jnp.where(mask, err, 0).sum() / jnp.maximum(mask.sum() * cfg.d_out, 1)

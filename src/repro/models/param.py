@@ -1,0 +1,112 @@
+"""Parameter declaration system.
+
+Models declare parameters as trees of :class:`ArraySpec` (shape + logical
+axis names + init). The same tree serves three consumers:
+
+  * ``init_params``     — materialize real arrays (examples, smoke tests);
+  * ``abstract_params`` — ShapeDtypeStructs (dry-run lowering: grok-314B is
+    never materialized on the CPU host);
+  * ``pspecs``          — PartitionSpecs from a logical→mesh-axis rule map.
+
+Logical axis vocabulary (rules map these to mesh axes or None):
+  "dp"      batch/tokens            "embed"   d_model rows
+  "heads"   attention heads         "kv_heads" kv heads
+  "mlp"     FFN hidden              "vocab"   vocabulary rows
+  "expert"  MoE expert dim          "expert_mlp" per-expert FFN hidden
+  "layers"  stacked scan dim        "seq"     sequence
+  "nodes"/"edges" graph dims        "rows"    embedding-table rows
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ArraySpec:
+    shape: tuple
+    logical: tuple  # one name (or None) per dim
+    dtype: Any = jnp.float32
+    init: str = "normal"  # normal | zeros | ones | embed
+    scale: Optional[float] = None
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def _fan_in(shape) -> float:
+    return float(shape[-2]) if len(shape) >= 2 else float(shape[-1])
+
+
+def init_params(spec_tree, rng_key):
+    leaves, treedef = jax.tree_util.tree_flatten(
+        spec_tree, is_leaf=lambda x: isinstance(x, ArraySpec)
+    )
+    keys = jax.random.split(rng_key, len(leaves))
+    out = []
+    for spec, k in zip(leaves, keys):
+        if spec.init == "zeros":
+            arr = jnp.zeros(spec.shape, spec.dtype)
+        elif spec.init == "ones":
+            arr = jnp.ones(spec.shape, spec.dtype)
+        else:
+            scale = spec.scale
+            if scale is None:
+                scale = 1.0 if spec.init == "embed" else 1.0 / np.sqrt(_fan_in(spec.shape))
+            arr = (jax.random.normal(k, spec.shape, jnp.float32) * scale).astype(
+                spec.dtype
+            )
+        out.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def abstract_params(spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, ArraySpec),
+    )
+
+
+def pspecs(spec_tree, rules: dict):
+    """rules: logical axis name -> mesh axis (str | tuple | None)."""
+
+    def one(spec: ArraySpec) -> P:
+        axes = []
+        used = set()
+        for name in spec.logical:
+            ax = rules.get(name) if name is not None else None
+            # a mesh axis may appear only once in a PartitionSpec
+            key = tuple(ax) if isinstance(ax, (tuple, list)) else (ax,)
+            if ax is not None and any(k in used for k in key):
+                ax = None
+            if ax is not None:
+                used.update(key)
+            axes.append(ax)
+        return P(*axes)
+
+    return jax.tree_util.tree_map(
+        one, spec_tree, is_leaf=lambda x: isinstance(x, ArraySpec)
+    )
+
+
+def shardings(spec_tree, rules: dict, mesh):
+    from jax.sharding import NamedSharding
+
+    return jax.tree_util.tree_map(
+        lambda p: NamedSharding(mesh, p),
+        pspecs(spec_tree, rules),
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def count_params(spec_tree) -> int:
+    leaves = jax.tree_util.tree_leaves(
+        spec_tree, is_leaf=lambda x: isinstance(x, ArraySpec)
+    )
+    return int(sum(int(np.prod(s.shape)) for s in leaves))

@@ -1,0 +1,518 @@
+"""Decoder-only transformer LM family (dense GQA + MoE variants).
+
+Covers internlm2-20b, minicpm-2b, gemma-7b (dense) and
+moonshot-v1-16b-a3b, grok-1-314b (MoE). Pure-function style: params are
+pytrees declared via ArraySpec (models/param.py); every public entry point
+is jit/pjit-compatible with static config.
+
+Memory discipline for the production mesh:
+  * per-layer `jax.checkpoint` (remat); activations between layers are
+    constrained to ("dp", "model", None) — Megatron-style sequence
+    parallelism, so layer-boundary residuals stay ~MB-scale per device;
+  * attention loops over query chunks, each chunk checkpointed: scores for
+    one [B, c, H_loc, S] block are the only attention transient;
+  * the LM head + loss run in sequence chunks — no [B, S, V] tensor;
+  * MoE: capacity-factor dispatch into an [E, C, d] buffer (EP or TP).
+
+``unroll=True`` replaces every lax.scan with a Python loop. The dry-run
+uses it because XLA's cost_analysis counts a while-loop body once (not
+x trip count); training keeps scans for compile speed. Both paths produce
+identical math (tested).
+
+Attention params are kept head-major ([d, H, Dh] etc.) so the head axis
+shards directly — including non-divisible head counts (GSPMD pads), e.g.
+minicpm's 36 heads on a 16-wide model axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import constrain
+from repro.models.param import ArraySpec
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    act: str = "swiglu"  # swiglu | geglu | gelu
+    # MoE (n_experts == 0 -> dense FFN)
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    expert_sharding: str = "ep"  # "ep" | "tp"
+    moe_groups: int = 1  # dispatch groups (= DP shards in production)
+    # EPxTP folding: when n_experts < TP width, each expert's FFN dim is
+    # split into `expert_fold` slices stored as separate "half-experts",
+    # so the (folded) expert dim shards the full model axis and expert
+    # traffic is activations (all-to-all), never weights. grok: 8e x2.
+    expert_fold: int = 1
+    # misc
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    vocab_pad_to: int = 256
+    param_dtype: Any = jnp.bfloat16
+    attn_chunk: int = 512
+    attn_par: int = 1  # chunks batched per attention einsum (see attention())
+    loss_chunk: int = 512
+    logit_softcap: float = 0.0
+    embed_scale: bool = False  # gemma: embeddings * sqrt(d_model)
+    remat: bool = True
+    unroll: bool = False  # python loops instead of lax.scan (dry-run)
+    # GQA kv heads that do not divide the TP axis are replicated; expanding
+    # kv to full heads *before* attention keeps the score einsum sharded on
+    # the query-head axis. Train/prefill only (decode keeps grouped form).
+    expand_kv: bool = False
+
+    @property
+    def vocab_padded(self) -> int:
+        v, p = self.vocab, self.vocab_pad_to
+        return ((v + p - 1) // p) * p
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def ff_mult(self) -> int:
+        return 2 if self.act in ("swiglu", "geglu") else 1
+
+    def param_count(self) -> int:
+        d, f, L = self.d_model, self.d_ff, self.n_layers
+        attn = d * self.n_heads * self.d_head * 2 + d * self.n_kv * self.d_head * 2
+        if self.is_moe:
+            ffn = self.n_experts * (d * f * self.ff_mult + f * d) + d * self.n_experts
+        else:
+            ffn = d * f * self.ff_mult + f * d
+        return L * (attn + ffn + 2 * d) + 2 * self.vocab_padded * d + d
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top_k experts only)."""
+        if not self.is_moe:
+            return self.param_count()
+        d, f, L = self.d_model, self.d_ff, self.n_layers
+        attn = d * self.n_heads * self.d_head * 2 + d * self.n_kv * self.d_head * 2
+        ffn = self.top_k * (d * f * self.ff_mult + f * d) + d * self.n_experts
+        return L * (attn + ffn + 2 * d) + 2 * self.vocab_padded * d + d
+
+
+# ---------------------------------------------------------------- params
+
+
+def param_specs(cfg: TransformerConfig):
+    d, dt = cfg.d_model, cfg.param_dtype
+    L, H, Kv, Dh = cfg.n_layers, cfg.n_heads, cfg.n_kv, cfg.d_head
+
+    layer: dict[str, ArraySpec] = {
+        "ln1": ArraySpec((L, d), ("layers", None), dt, "ones"),
+        "ln2": ArraySpec((L, d), ("layers", None), dt, "ones"),
+        "wq": ArraySpec((L, d, H, Dh), ("layers", "embed", "heads", None), dt),
+        "wk": ArraySpec((L, d, Kv, Dh), ("layers", "embed", "kv_heads", None), dt),
+        "wv": ArraySpec((L, d, Kv, Dh), ("layers", "embed", "kv_heads", None), dt),
+        "wo": ArraySpec((L, H, Dh, d), ("layers", "heads", None, "embed"), dt),
+    }
+    if cfg.is_moe:
+        F = cfg.expert_fold
+        assert cfg.d_ff % F == 0 and (cfg.d_ff * cfg.ff_mult) % F == 0
+        layer |= {
+            "router": ArraySpec((L, d, cfg.n_experts), ("layers", "embed", None), jnp.float32),
+            "w1": ArraySpec(
+                (L, cfg.n_experts * F, d, cfg.d_ff * cfg.ff_mult // F),
+                ("layers", "expert", "embed", "expert_mlp"),
+                dt,
+            ),
+            "w2": ArraySpec(
+                (L, cfg.n_experts * F, cfg.d_ff // F, d),
+                ("layers", "expert", "expert_mlp", "embed"),
+                dt,
+            ),
+        }
+    else:
+        layer |= {
+            "w1": ArraySpec((L, d, cfg.d_ff * cfg.ff_mult), ("layers", "embed", "mlp"), dt),
+            "w2": ArraySpec((L, cfg.d_ff, d), ("layers", "mlp", "embed"), dt),
+        }
+    return {
+        "embed": ArraySpec((cfg.vocab_padded, d), ("vocab", "embed"), dt, "embed", 1.0),
+        "layers": layer,
+        "ln_f": ArraySpec((d,), (None,), dt, "ones"),
+        "lm_head": ArraySpec((d, cfg.vocab_padded), ("embed", "vocab"), dt),
+    }
+
+
+# ---------------------------------------------------------------- layers
+
+
+def rmsnorm(x, scale, eps):
+    x32 = x.astype(jnp.float32)
+    inv = jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (x32 * inv).astype(x.dtype) * scale
+
+
+def rope(x, positions, theta):
+    """x: [..., S, H, D]; positions broadcastable [..., S]."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(-jnp.arange(0, half, dtype=jnp.float32) * (np.log(theta) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, half]
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _activate(h, act):
+    if act in ("swiglu", "geglu"):
+        g, u = jnp.split(h, 2, axis=-1)
+        gate = jax.nn.silu(g) if act == "swiglu" else jax.nn.gelu(g)
+        return gate * u
+    return jax.nn.gelu(h)
+
+
+def _loop(body, xs_list, cfg: TransformerConfig, checkpoint: bool):
+    """Unrollable scan over leading axis of each tree in xs_list."""
+    fn = jax.checkpoint(body) if (checkpoint and cfg.remat) else body
+    n = jax.tree_util.tree_leaves(xs_list[0])[0].shape[0]
+    if cfg.unroll:
+        outs = []
+        for i in range(n):
+            args = [jax.tree_util.tree_map(lambda a: a[i], xs) for xs in xs_list]
+            outs.append(fn(*args))
+        return jax.tree_util.tree_map(lambda *ys: jnp.stack(ys), *outs)
+    def scan_body(_, args):
+        return None, fn(*args)
+    _, outs = jax.lax.scan(scan_body, None, tuple(xs_list))
+    return outs
+
+
+def attention(q, k, v, cfg: TransformerConfig, causal: bool = True):
+    """Query-chunked attention; per-chunk remat; no [S, S] global tensor.
+
+    q: [B, S, Hq, D], k/v: [B, S, Hk, D] with Hq = Hk * G.
+
+    Two parallelism regimes:
+      * heads shard the model axis (attn_par=1): a sequential loop over
+        query chunks; each step's [B, c, H_loc, S] score block is the only
+        attention transient;
+      * heads replicated (e.g. 36 heads on a 16-wide axis): ``attn_par``
+        chunks are batched into one einsum with the chunk dim sharded over
+        the model axis ("model_seq") — sequence-parallel attention — and
+        an outer loop bounds memory.
+
+    The masked upper triangle costs ~2x attention FLOPs; see EXPERIMENTS
+    §Perf for the block-skipping variant trade-off.
+    """
+    B, S, Hq, D = q.shape
+    Hk = k.shape[2]
+    G = Hq // Hk
+    c = min(cfg.attn_chunk, S)
+    if S % c:  # ragged tail (odd prompt lengths): single full-S chunk
+        c = S
+    nq = S // c
+    par = max(1, min(cfg.attn_par, nq))
+    while nq % par:
+        par -= 1
+    n_outer = nq // par
+    # par is the *leading* factor of the seq split so a ("dp","model",...)
+    # seq-sharded q maps onto the par dim with zero resharding; k/v are
+    # explicitly replicated over the model axis (the seq-parallel
+    # all-gather), otherwise the einsum fights two shardings and XLA
+    # emits all-to-alls (observed: 2.3 GiB/layer before this fix).
+    qc = q.reshape(B, par, n_outer, c, Hq, D)
+    if par > 1:
+        qc = constrain(qc, "dp", "model_seq", None, None, None, None)
+        k = constrain(k, "dp", None, None, None)
+        v = constrain(v, "dp", None, None, None)
+    qc = jnp.moveaxis(qc, 2, 0)  # [n_outer, B, par, c, Hq, D]
+    scale = 1.0 / np.sqrt(D)
+    kpos = jnp.arange(S)
+
+    def qstep(i, qi):
+        qg = qi.reshape(B, par, c, Hk, G, D)
+        s = jnp.einsum("bpchgd,bkhd->bphgck", qg, k,
+                       preferred_element_type=jnp.float32) * scale
+        if causal:
+            qpos = (jnp.arange(par)[:, None] * n_outer + i) * c + jnp.arange(c)[None, :]
+            mask = qpos[..., None] >= kpos  # [par, c, S]
+            s = jnp.where(mask[None, :, None, None], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bphgck,bkhd->bpchgd", p.astype(v.dtype), v,
+                       preferred_element_type=jnp.float32)
+        return o.reshape(B, par, c, Hq, D).astype(q.dtype)
+
+    outs = _loop(qstep, [jnp.arange(n_outer), qc], cfg, checkpoint=True)
+    # [n_outer, B, par, c, Hq, D] -> [B, par, n_outer, c, Hq, D] -> flat S
+    return jnp.moveaxis(outs, 0, 2).reshape(B, S, Hq, D)
+
+
+def _moe_ffn(x, router_w, w1, w2, cfg: TransformerConfig):
+    """x: [T, d] -> [T, d]. Group-local capacity dispatch, EP/TP-shardable.
+
+    Tokens split into ``moe_groups`` groups (= DP shards in production);
+    every dispatch op (one-hot, cumsum, scatter, gather) is *batched over
+    the group dim*, which shards over dp — so dispatch never leaves the
+    device and the only cross-device movement is the expert einsum's
+    EP all-to-all / TP weight traffic. Per-group capacity (standard MoE
+    semantics). Ungrouped (G=1) is the faithful global-priority variant.
+    """
+    T, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    G = max(1, min(cfg.moe_groups, T))
+    assert T % G == 0, (T, G)
+    Tl = T // G
+    C = int(np.ceil(Tl * k * cfg.capacity_factor / E))
+    C = ((C + 7) // 8) * 8
+    xg = constrain(x.reshape(G, Tl, d), "dp", None, None)
+    logits = jnp.einsum(
+        "gtd,de->gte", xg.astype(jnp.float32), router_w
+    )  # [G, Tl, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eid = jax.lax.top_k(probs, k)  # [G, Tl, k]
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+    eid_f = eid.reshape(G, Tl * k)
+    gate_f = gate.reshape(G, Tl * k)
+    oh = jax.nn.one_hot(eid_f, E, dtype=jnp.int32)  # [G, Tl*k, E]
+    pos = (jnp.cumsum(oh, axis=1) * oh).sum(-1) - 1  # position within expert
+    keep = pos < C
+    slot = jnp.where(keep, eid_f * C + jnp.clip(pos, 0, C - 1), E * C)
+    tok = jnp.repeat(jnp.arange(Tl), k)[None].repeat(G, 0)  # [G, Tl*k]
+    xt = jnp.take_along_axis(xg, tok[..., None], axis=1)  # [G, Tl*k, d]
+    disp = jax.vmap(
+        lambda data, ids: jax.ops.segment_sum(data, ids, num_segments=E * C + 1)
+    )(jnp.where(keep[..., None], xt, 0), slot)[:, : E * C]
+    # the scatter is dp-local by construction; pin it so its vjp stays local
+    disp = constrain(disp, "dp", None, None)
+    buf = disp.reshape(G, E, C, d).astype(cfg.param_dtype)
+    F = cfg.expert_fold
+    if F > 1:  # EPxTP: every fold of an expert sees the same tokens
+        buf = jnp.repeat(buf, F, axis=1)  # [G, E*F, C, d]
+    buf = constrain(buf, "dp", "expert", None, None)
+    h = jnp.einsum("gecd,edf->gecf", buf, w1)
+    h = constrain(h, "dp", "expert", None, "expert_mlp")
+    h = _activate(h, cfg.act)
+    out_buf = jnp.einsum("gecf,efd->gecd", h, w2)
+    out_buf = constrain(out_buf, "dp", "expert", None, None)
+    if F > 1:  # block-diagonal FFN decomposition: sum fold partials
+        out_buf = out_buf.reshape(G, E, F, C, d).sum(2)
+    # combine gathers from a dp-local (model-replicated) bf16 buffer: one
+    # clean all-gather instead of f32 scatter all-reduces in the bwd
+    out_flat = constrain(out_buf.reshape(G, E * C, d), "dp", None, None)
+    picked = jnp.take_along_axis(
+        out_flat, jnp.clip(slot, 0, E * C - 1)[..., None], axis=1
+    )  # [G, Tl*k, d]
+    picked = jnp.where(keep[..., None], picked, 0)
+    combined = jax.vmap(
+        lambda data, ids: jax.ops.segment_sum(data, ids, num_segments=Tl)
+    )(picked * gate_f[..., None].astype(picked.dtype), tok)
+    combined = constrain(combined, "dp", None, None)
+    return combined.reshape(T, d).astype(x.dtype)
+
+
+def _qkv(h, lp, cfg: TransformerConfig, positions):
+    B, S = h.shape[:2]
+    q = rope(jnp.einsum("bsd,dhk->bshk", h, lp["wq"]), positions, cfg.rope_theta)
+    kk = rope(jnp.einsum("bsd,dhk->bshk", h, lp["wk"]), positions, cfg.rope_theta)
+    vv = jnp.einsum("bsd,dhk->bshk", h, lp["wv"])
+    if cfg.attn_par > 1 and S > 1:
+        # keep the projections seq-sharded so the seq-parallel all-gather
+        # in attention() moves *results*, not redundant compute
+        q = constrain(q, "dp", "model_seq", None, None)
+        kk = constrain(kk, "dp", "model_seq", None, None)
+        vv = constrain(vv, "dp", "model_seq", None, None)
+    return q, kk, vv
+
+
+def _layer(x, lp, cfg: TransformerConfig, positions):
+    B, S, d = x.shape
+    G = cfg.n_heads // cfg.n_kv
+    h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+    q, kk, vv = _qkv(h, lp, cfg, positions)
+    if cfg.expand_kv and G > 1:
+        kk = jnp.repeat(kk, G, axis=2)  # [B, S, H, D] — shardable on H
+        vv = jnp.repeat(vv, G, axis=2)
+    attn = attention(q, kk, vv, cfg)
+    x = x + jnp.einsum("bshk,hkd->bsd", attn, lp["wo"]).astype(x.dtype)
+    h2 = rmsnorm(x, lp["ln2"], cfg.norm_eps)
+    if cfg.is_moe:
+        out = _moe_ffn(h2.reshape(B * S, d), lp["router"], lp["w1"], lp["w2"], cfg)
+        out = out.reshape(B, S, d)
+    else:
+        out = _activate(h2 @ lp["w1"], cfg.act) @ lp["w2"]
+    return x + out.astype(x.dtype)
+
+
+def _run_layers(params, x, positions, cfg: TransformerConfig, collect_kv: bool = False):
+    def one(x, lp):
+        y = _layer(x, lp, cfg, positions)
+        # layer-boundary carry sharding: seq for replicated-head archs
+        # (feeds their seq-parallel attention), feature-dim otherwise —
+        # keeps the remat-saved carry at 1/16 size without the seq<->head
+        # resharding ping-pong (EXPERIMENTS §Perf A-1)
+        y = constrain(y, "dp", "model_seq", "model_d")
+        if collect_kv:
+            h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+            _, kk, vv = _qkv(h, lp, cfg, positions)
+            return y, (kk.astype(cfg.param_dtype), vv.astype(cfg.param_dtype))
+        return y, None
+
+    body = jax.checkpoint(one) if cfg.remat else one
+    if cfg.unroll:
+        kvs = []
+        for i in range(cfg.n_layers):
+            lp = jax.tree_util.tree_map(lambda a: a[i], params["layers"])
+            x, kv = body(x, lp)
+            kvs.append(kv)
+        kv_out = (
+            jax.tree_util.tree_map(lambda *ys: jnp.stack(ys), *kvs)
+            if collect_kv
+            else None
+        )
+        return x, kv_out
+    x, kv_out = jax.lax.scan(body, x, params["layers"])
+    return x, kv_out
+
+
+def backbone(params, tokens, cfg: TransformerConfig):
+    """tokens [B, S] -> final hidden [B, S, d]."""
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = constrain(x, "dp", "model_seq", "model_d")
+    if cfg.embed_scale:
+        x = x * np.sqrt(cfg.d_model)
+    positions = jnp.arange(S)[None, :]
+    x, _ = _run_layers(params, x, positions, cfg)
+    return rmsnorm(x, params["ln_f"], cfg.norm_eps)
+
+
+def loss_fn(params, tokens, cfg: TransformerConfig):
+    """Next-token cross entropy, head computed in sequence chunks."""
+    B, S = tokens.shape
+    h = backbone(params, tokens, cfg)
+    labels = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1)
+    mask = jnp.concatenate(
+        [jnp.ones((B, S - 1), bool), jnp.zeros((B, 1), bool)], axis=1
+    )
+    c = min(cfg.loss_chunk, S)
+    nchunk = S // c
+    hc = jnp.moveaxis(h.reshape(B, nchunk, c, -1), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(B, nchunk, c), 1, 0)
+    mc = jnp.moveaxis(mask.reshape(B, nchunk, c), 1, 0)
+
+    def chunk_nll(hh, ll, mm):
+        logits = (hh @ params["lm_head"]).astype(jnp.float32)
+        if cfg.logit_softcap:
+            logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ll[..., None], axis=-1)[..., 0]
+        return jnp.where(mm, lse - gold, 0.0).sum()
+
+    nlls = _loop(chunk_nll, [hc, lc, mc], cfg, checkpoint=True)
+    return nlls.sum() / jnp.maximum(mask.sum(), 1)
+
+
+# ---------------------------------------------------------------- decode
+
+
+def kv_cache_specs(cfg: TransformerConfig, batch: int, max_len: int):
+    dt = cfg.param_dtype
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv, cfg.d_head)
+    logical = ("layers", "cache_batch", "seq", "kv_heads", None)
+    return {
+        "k": ArraySpec(shape, logical, dt, "zeros"),
+        "v": ArraySpec(shape, logical, dt, "zeros"),
+    }
+
+
+def prefill(params, tokens, cfg: TransformerConfig):
+    """Build the KV cache for a prompt; returns (cache, last hidden)."""
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = constrain(x, "dp", "model_seq", "model_d")
+    if cfg.embed_scale:
+        x = x * np.sqrt(cfg.d_model)
+    positions = jnp.arange(S)[None, :]
+    x, (ks, vs) = _run_layers(params, x, positions, cfg, collect_kv=True)
+    x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    return {"k": ks, "v": vs}, x[:, -1]
+
+
+def decode_step(params, cache, token, cache_len, cfg: TransformerConfig):
+    """One decode step. token [B] int32; cache_len scalar int32.
+
+    Attention runs over the full (padded) cache with a length mask —
+    sequence-sharded caches combine via XLA's partial-softmax collectives.
+    Returns (logits [B, V], new k/v slices [L, B, 1, Kv, D]).
+    """
+    B = token.shape[0]
+    S_max = cache["k"].shape[2]
+    x = jnp.take(params["embed"], token, axis=0)[:, None]  # [B, 1, d]
+    if cfg.embed_scale:
+        x = x * np.sqrt(cfg.d_model)
+    pos = jnp.full((B, 1), cache_len, jnp.int32)
+    # slots [0, cache_len) + the virtual self slot at index S_max
+    lmask = (jnp.arange(S_max + 1)[None, :] < cache_len).at[:, S_max].set(True)
+
+    def one_layer(x, lp, kcache, vcache):
+        Bq, _, d = x.shape
+        G = cfg.n_heads // cfg.n_kv
+        h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+        q, kk, vv = _qkv(h, lp, cfg, pos)
+        qg = q.reshape(Bq, 1, cfg.n_kv, G, cfg.d_head)
+        # the current token attends to the cache AND to itself: its k/v
+        # ride along as a virtual cache slot S_max (committed by the caller)
+        kc = jnp.concatenate([kcache, kk.astype(kcache.dtype)], axis=1)
+        vc = jnp.concatenate([vcache, vv.astype(vcache.dtype)], axis=1)
+        s = jnp.einsum(
+            "bqhgd,bshd->bhgqs", qg, kc, preferred_element_type=jnp.float32
+        ) / np.sqrt(cfg.d_head)
+        s = jnp.where(lmask[:, None, None, None, :], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        attn = jnp.einsum(
+            "bhgqs,bshd->bqhgd", p.astype(vc.dtype), vc,
+            preferred_element_type=jnp.float32,
+        ).reshape(Bq, 1, cfg.n_heads, cfg.d_head)
+        x = x + jnp.einsum("bshk,hkd->bsd", attn.astype(x.dtype), lp["wo"])
+        h2 = rmsnorm(x, lp["ln2"], cfg.norm_eps)
+        if cfg.is_moe:
+            out = _moe_ffn(h2.reshape(Bq, d), lp["router"], lp["w1"], lp["w2"], cfg)
+            out = out[:, None]
+        else:
+            out = _activate(h2 @ lp["w1"], cfg.act) @ lp["w2"]
+        return x + out.astype(x.dtype), (
+            kk.astype(cfg.param_dtype),
+            vv.astype(cfg.param_dtype),
+        )
+
+    if cfg.unroll:
+        kvs = []
+        for i in range(cfg.n_layers):
+            lp = jax.tree_util.tree_map(lambda a: a[i], params["layers"])
+            x, kv = one_layer(x, lp, cache["k"][i], cache["v"][i])
+            kvs.append(kv)
+        knew, vnew = jax.tree_util.tree_map(lambda *ys: jnp.stack(ys), *kvs)
+    else:
+        def body(x, lpkv):
+            lp, kc, vc = lpkv
+            return one_layer(x, lp, kc, vc)
+
+        x, (knew, vnew) = jax.lax.scan(
+            body, x, (params["layers"], cache["k"], cache["v"])
+        )
+    x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    logits = (x[:, 0] @ params["lm_head"]).astype(jnp.float32)
+    if cfg.logit_softcap:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    return logits, (knew, vnew)

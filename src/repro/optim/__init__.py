@@ -1,0 +1,22 @@
+from repro.optim.adamw import (
+    AdamWConfig,
+    adamw_init,
+    adamw_init_specs,
+    adamw_update,
+    clip_by_global_norm,
+)
+from repro.optim.schedule import wsd_schedule, cosine_schedule
+from repro.optim.compression import compress_int8, decompress_int8, ErrorFeedback
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_init_specs",
+    "adamw_update",
+    "clip_by_global_norm",
+    "wsd_schedule",
+    "cosine_schedule",
+    "compress_int8",
+    "decompress_int8",
+    "ErrorFeedback",
+]

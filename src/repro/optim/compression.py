@@ -1,0 +1,59 @@
+"""Gradient compression: int8 blockwise quantization with error feedback.
+
+Used by the shard_map training path to compress the DP gradient exchange
+(psum of int8 payloads + fp32 per-block scales), with residual error
+carried to the next step (EF-SGD style, Karimireddy et al. 2019). A
+distributed-optimization trick for the 1000-node regime where DCN
+all-reduce bandwidth dominates.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def _pad_len(n: int) -> int:
+    return (n + BLOCK - 1) // BLOCK * BLOCK
+
+
+def compress_int8(x: jax.Array):
+    """x -> (q int8 [n_pad], scale f32 [n_pad/BLOCK], shape)."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    n = flat.shape[0]
+    npad = _pad_len(n)
+    flat = jnp.pad(flat, (0, npad - n))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1) / 127.0
+    q = jnp.round(blocks / jnp.maximum(scale, 1e-12)[:, None]).astype(jnp.int8)
+    return q, scale, x.shape
+
+
+def decompress_int8(q, scale, shape, dtype=jnp.float32):
+    flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape).astype(dtype)
+
+
+@dataclasses.dataclass
+class ErrorFeedback:
+    """Stateless helpers; the residual lives in the caller's state tree."""
+
+    @staticmethod
+    def init(params):
+        return jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+
+    @staticmethod
+    def compress_with_feedback(grad, residual):
+        """(grad, residual) -> (q, scale, shape, new_residual)."""
+        corrected = grad.astype(jnp.float32) + residual
+        q, scale, shape = compress_int8(corrected)
+        recon = decompress_int8(q, scale, shape)
+        return q, scale, shape, corrected - recon

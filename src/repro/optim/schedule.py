@@ -1,0 +1,23 @@
+"""LR schedules. WSD (warmup-stable-decay) is MiniCPM's contribution
+(arXiv:2404.06395) and is wired as that arch's default."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def wsd_schedule(step, peak_lr: float, warmup: int, stable: int, decay: int,
+                 final_frac: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+    in_decay = jnp.clip((step - warmup - stable) / jnp.maximum(decay, 1), 0.0, 1.0)
+    decay_mult = jnp.exp(jnp.log(final_frac) * in_decay)  # exponential decay leg
+    return jnp.where(step < warmup + stable, warm, peak_lr * decay_mult)
+
+
+def cosine_schedule(step, peak_lr: float, warmup: int, total: int,
+                    final_frac: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+    t = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < warmup, warm, peak_lr * cos)

@@ -1,0 +1,20 @@
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def make_stream(rng, n, m, L, eps, pad=0, self_loops=False):
+    from repro.core import EdgeStream, SubstreamConfig
+
+    cfg = SubstreamConfig(n=n, L=L, eps=eps)
+    src = rng.integers(0, n, m)
+    dst = rng.integers(0, n, m)
+    if not self_loops:
+        keep = src != dst
+        src, dst = src[keep], dst[keep]
+    w = rng.uniform(1.0, cfg.w_max, src.shape[0]).astype(np.float32)
+    return EdgeStream.from_numpy(src, dst, w, n_pad=src.shape[0] + pad), cfg

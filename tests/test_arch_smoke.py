@@ -1,0 +1,131 @@
+"""Per-architecture smoke tests (deliverable f): instantiate the REDUCED
+config of each assigned arch, run one forward/train step on CPU, assert
+output shapes + no NaNs."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import all_arch_ids, get_arch
+from repro.data.pipeline import make_gnn_batch
+from repro.models.param import count_params, init_params
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+LM_IDS = ["internlm2-20b", "minicpm-2b", "gemma-7b", "moonshot-v1-16b-a3b", "grok-1-314b"]
+GNN_IDS = ["egnn", "gin-tu", "meshgraphnet", "equiformer-v2"]
+
+
+def test_registry_complete():
+    ids = all_arch_ids()
+    assert len(ids) == 10
+    for a in LM_IDS + GNN_IDS + ["bert4rec"]:
+        assert a in ids
+
+
+@pytest.mark.parametrize("arch_id", LM_IDS)
+def test_lm_smoke_train_step(arch_id):
+    from repro.models import transformer as tfm
+
+    arch = get_arch(arch_id)
+    cfg = dataclasses.replace(arch.smoke_config, param_dtype=jnp.float32)
+    params = init_params(tfm.param_specs(cfg), jax.random.key(0))
+    tokens = jax.random.randint(jax.random.key(1), (2, 64), 0, cfg.vocab)
+    loss, grads = jax.jit(jax.value_and_grad(lambda p: tfm.loss_fn(p, tokens, cfg)))(
+        params
+    )
+    assert np.isfinite(float(loss))
+    opt_cfg = AdamWConfig(lr=1e-3)
+    opt = adamw_init(params, opt_cfg)
+    new_p, new_opt, gnorm = adamw_update(params, grads, opt, 1e-3, opt_cfg)
+    assert np.isfinite(float(gnorm))
+    for leaf in jax.tree_util.tree_leaves(new_p):
+        assert np.isfinite(np.asarray(leaf)).all()
+
+
+@pytest.mark.parametrize("arch_id", LM_IDS)
+def test_lm_smoke_decode_consistency(arch_id):
+    """prefill+decode logits == full forward logits at the next position."""
+    from repro.models import transformer as tfm
+
+    arch = get_arch(arch_id)
+    # capacity_factor high enough that no token is dropped: MoE capacity
+    # competition legitimately differs between batched-forward routing and
+    # single-token decode routing (top-1 predictions agree regardless)
+    cfg = dataclasses.replace(
+        arch.smoke_config, param_dtype=jnp.float32, remat=False,
+        capacity_factor=8.0,
+    )
+    params = init_params(tfm.param_specs(cfg), jax.random.key(0))
+    B, S = 2, 32
+    tokens = jax.random.randint(jax.random.key(1), (B, S + 1), 0, cfg.vocab)
+    cache, _ = tfm.prefill(params, tokens[:, :S], cfg)
+    logits_d, _ = tfm.decode_step(params, cache, tokens[:, S], jnp.int32(S), cfg)
+    h = tfm.backbone(params, tokens, cfg)
+    logits_f = (h[:, S] @ params["lm_head"]).astype(jnp.float32)
+    if cfg.logit_softcap:
+        logits_f = cfg.logit_softcap * jnp.tanh(logits_f / cfg.logit_softcap)
+    np.testing.assert_allclose(
+        np.asarray(logits_d), np.asarray(logits_f), rtol=2e-2, atol=2e-2
+    )
+
+
+@pytest.mark.parametrize("arch_id", GNN_IDS)
+def test_gnn_smoke_train_step(arch_id):
+    import importlib
+
+    arch = get_arch(arch_id)
+    mod = importlib.import_module(f"repro.models.{arch.gnn_model}")
+    cfg = arch.smoke_config
+    params = init_params(mod.param_specs(cfg), jax.random.key(0))
+    n_classes = getattr(cfg, "n_classes", 0)
+    batch = make_gnn_batch(
+        48, 160, cfg.d_in,
+        n_classes=n_classes if arch_id == "gin-tu" else 0,
+        d_out=getattr(cfg, "d_out", 1),
+        coords=True, seed=1,
+    )
+    loss, grads = jax.jit(jax.value_and_grad(lambda p: mod.loss_fn(p, batch, cfg)))(
+        params
+    )
+    assert np.isfinite(float(loss))
+    out = mod.forward(params, batch, cfg)
+    out = out[0] if isinstance(out, tuple) else out
+    assert out.shape[0] == 48
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_bert4rec_smoke():
+    from repro.data.pipeline import RecsysPipeline
+    from repro.models import bert4rec as b4r
+
+    arch = get_arch("bert4rec")
+    cfg = arch.smoke_config
+    params = init_params(b4r.param_specs(cfg), jax.random.key(0))
+    pipe = RecsysPipeline(cfg.item_vocab, 4, cfg.seq_len, cfg.n_mask,
+                          cfg.n_negatives, cfg.n_context)
+    batch = pipe.batch_at(0)
+    loss = jax.jit(lambda p, b: b4r.loss_fn(p, b, cfg))(params, batch)
+    assert np.isfinite(float(loss))
+    scores = b4r.serve_scores(params, batch["item_ids"], batch["context_ids"], cfg)
+    assert scores.shape == (4, cfg.item_vocab)
+    assert np.isfinite(np.asarray(scores)).all()
+
+
+def test_full_config_param_counts():
+    """Published configs hit the expected parameter scales."""
+    from repro.models import transformer as tfm
+
+    expect = {
+        "internlm2-20b": (17e9, 23e9),
+        "minicpm-2b": (2.2e9, 3.3e9),
+        "gemma-7b": (8e9, 10e9),  # 8.5B with embeddings
+        "grok-1-314b": (290e9, 340e9),
+    }
+    for arch_id, (lo, hi) in expect.items():
+        cfg = get_arch(arch_id).config
+        n = cfg.param_count()
+        assert lo < n < hi, (arch_id, n)
+    moon = get_arch("moonshot-v1-16b-a3b").config
+    assert moon.active_param_count() < 0.25 * moon.param_count()

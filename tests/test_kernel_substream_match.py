@@ -1,0 +1,71 @@
+"""Pallas substream_match kernel: shape/dtype sweeps vs the jnp oracle."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import EdgeStream, SubstreamConfig, mwm_scan
+from repro.kernels.substream_match.ops import substream_match, vmem_plan
+from repro.kernels.substream_match.ref import substream_match_ref
+
+
+def _case(n, m, L, eps, seed, wdtype=np.float32, pad=0):
+    rng = np.random.default_rng(seed)
+    cfg = SubstreamConfig(n=n, L=L, eps=eps)
+    src = rng.integers(0, n, m)
+    dst = rng.integers(0, n, m)  # self-loops kept on purpose
+    w = rng.uniform(0.5, cfg.w_max * 1.05, m).astype(wdtype)
+    return EdgeStream.from_numpy(src, dst, w, n_pad=m + pad), cfg
+
+
+@pytest.mark.parametrize("n,m,L,block_e", [
+    (16, 40, 1, 8),
+    (100, 500, 48, 128),
+    (64, 256, 64, 64),
+    (257, 1000, 17, 256),  # unaligned n and L
+    (32, 7, 128, 8),  # fewer edges than one block
+])
+def test_kernel_matches_scan(n, m, L, block_e):
+    stream, cfg = _case(n, m, L, 0.15, seed=n + m)
+    want = mwm_scan(stream, cfg)
+    got = substream_match(stream, cfg, block_e=block_e, interpret=True)
+    assert (np.asarray(got.assigned) == np.asarray(want.assigned)).all()
+    assert (np.asarray(got.mb) == np.asarray(want.mb)).all()
+
+
+@pytest.mark.parametrize("wdtype", [np.float32, np.float16])
+def test_kernel_weight_dtypes(wdtype):
+    stream, cfg = _case(48, 300, 32, 0.2, seed=7, wdtype=wdtype)
+    want = mwm_scan(stream, cfg)
+    got = substream_match(stream, cfg, block_e=64, interpret=True)
+    assert (np.asarray(got.assigned) == np.asarray(want.assigned)).all()
+
+
+def test_kernel_padding_edges():
+    stream, cfg = _case(30, 100, 16, 0.1, seed=3, pad=57)
+    want = mwm_scan(stream, cfg)
+    got = substream_match(stream, cfg, block_e=32, interpret=True)
+    assert (np.asarray(got.assigned) == np.asarray(want.assigned)).all()
+
+
+def test_kernel_ref_oracle_agrees():
+    stream, cfg = _case(40, 200, 24, 0.1, seed=11)
+    w = jnp.where(stream.valid, stream.weight, 0.0)
+    a_ref, mb_ref = substream_match_ref(
+        stream.src, stream.dst, w, cfg.thresholds(), cfg.n
+    )
+    want = mwm_scan(stream, cfg)
+    assert (np.asarray(a_ref) == np.asarray(want.assigned)).all()
+    assert (np.asarray(mb_ref).astype(bool) == np.asarray(want.mb)).all()
+
+
+def test_vmem_budget_enforced():
+    cfg = SubstreamConfig(n=10_000_000, L=512, eps=0.1)
+    stream, _ = _case(16, 8, 4, 0.1, seed=0)
+    with pytest.raises(ValueError, match="VMEM"):
+        substream_match(stream, cfg, interpret=True)
+
+
+def test_vmem_plan_alignment():
+    n_pad, L_pad, nbytes = vmem_plan(100, 48)
+    assert n_pad % 8 == 0 and L_pad % 128 == 0
+    assert nbytes == n_pad * L_pad

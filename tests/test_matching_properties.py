@@ -1,0 +1,145 @@
+"""Property tests (hypothesis) for the substream-centric matching core."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    EdgeStream,
+    SubstreamConfig,
+    exact_mwm_weight,
+    gseq,
+    matching_weight,
+    merge_device,
+    merge_host,
+    mwm_rounds,
+    mwm_scan,
+    mwm_pipeline,
+    substream_matchings,
+)
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def _stream(draw):
+    n = draw(st.integers(8, 48))
+    m = draw(st.integers(1, 120))
+    L = draw(st.sampled_from([1, 4, 16, 33]))
+    eps = draw(st.sampled_from([0.05, 0.1, 0.5]))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    cfg = SubstreamConfig(n=n, L=L, eps=eps)
+    src = rng.integers(0, n, m)
+    dst = rng.integers(0, n, m)  # self-loops and duplicates allowed
+    w = rng.uniform(0.5, cfg.w_max * 1.1, m).astype(np.float32)
+    pad = draw(st.integers(0, 8))
+    return EdgeStream.from_numpy(src, dst, w, n_pad=m + pad), cfg
+
+
+stream_cfg = st.builds(lambda d: d, st.data()).map(lambda d: None)  # unused
+
+
+@given(st.data())
+@settings(**SETTINGS)
+def test_substream_matchings_are_matchings_and_maximal(data):
+    stream, cfg = _stream(data.draw)
+    added = np.asarray(substream_matchings(stream, cfg))  # [m, L]
+    res = np.asarray(mwm_scan(stream, cfg).mb)
+    src = np.asarray(stream.src)
+    dst = np.asarray(stream.dst)
+    w = np.asarray(stream.weight)
+    valid = np.asarray(stream.valid)
+    thr = (1 + cfg.eps) ** np.arange(cfg.L)
+    for i in range(cfg.L):
+        sel = added[:, i]
+        verts = np.concatenate([src[sel], dst[sel]])
+        # matching: no vertex repeated
+        assert len(verts) == len(set(verts.tolist()))
+        # mb consistency
+        assert set(np.nonzero(res[:, i])[0].tolist()) == set(verts.tolist())
+        # maximality: every eligible valid edge has a matched endpoint
+        elig = valid & (w >= thr[i]) & (src != dst)
+        for e in np.nonzero(elig & ~sel)[0]:
+            assert res[src[e], i] or res[dst[e], i]
+
+
+@given(st.data())
+@settings(**SETTINGS)
+def test_rounds_equals_scan(data):
+    stream, cfg = _stream(data.draw)
+    a = mwm_scan(stream, cfg)
+    b = mwm_rounds(stream, cfg)
+    assert (np.asarray(a.assigned) == np.asarray(b.assigned)).all()
+    assert (np.asarray(a.mb) == np.asarray(b.mb)).all()
+
+
+@given(st.data())
+@settings(**SETTINGS)
+def test_merge_host_equals_device_and_T_is_matching(data):
+    stream, cfg = _stream(data.draw)
+    res = mwm_scan(stream, cfg)
+    idx = merge_host(stream, res, cfg)
+    mask = np.asarray(merge_device(stream, res, cfg))
+    assert (np.nonzero(mask)[0] == idx).all()
+    src = np.asarray(stream.src)[idx]
+    dst = np.asarray(stream.dst)[idx]
+    verts = np.concatenate([src, dst])
+    assert len(verts) == len(set(verts.tolist()))
+
+
+@given(st.data())
+@settings(max_examples=10, deadline=None)
+def test_approximation_bound(data):
+    """w(M*) / w(T) <= 4 + eps — the paper's Crouch–Stubbs guarantee.
+
+    Edges below substream 0's threshold can never be picked, so restrict
+    weights to [1, w_max] (the paper's §5.1.4 weight regime).
+    """
+    n = data.draw(st.integers(6, 28))
+    m = data.draw(st.integers(1, 60))
+    L = data.draw(st.sampled_from([16, 32]))
+    eps = 0.1
+    seed = data.draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    cfg = SubstreamConfig(n=n, L=L, eps=eps)
+    src = rng.integers(0, n, m)
+    dst = rng.integers(0, n, m)
+    keep = src != dst
+    src, dst = src[keep], dst[keep]
+    if len(src) == 0:
+        return
+    w = rng.uniform(1.0, cfg.w_max, len(src)).astype(np.float32)
+    stream = EdgeStream.from_numpy(src, dst, w)
+    idx, weight = mwm_pipeline(stream, cfg, part1="scan")
+    exact = exact_mwm_weight(stream)
+    assert weight > 0 or exact == 0
+    if weight > 0:
+        assert exact / weight <= 4 + eps + 1e-3
+
+
+def test_gseq_bound(rng):
+    from tests.conftest import make_stream
+
+    stream, cfg = make_stream(rng, 40, 150, 16, 0.1)
+    gi = gseq(stream, 40, 0.1)
+    gw = matching_weight(stream, gi)
+    exact = exact_mwm_weight(stream)
+    assert exact / gw <= 2 + 0.1 + 1e-3
+    # G-SEQ's result is a matching
+    src = np.asarray(stream.src)[gi]
+    dst = np.asarray(stream.dst)[gi]
+    verts = np.concatenate([src, dst])
+    assert len(verts) == len(set(verts.tolist()))
+
+
+def test_blocked_matches_quality(rng):
+    """Blocked (Listing 2) output differs from CS-SEQ but keeps the bound."""
+    from repro.core import mwm_blocked
+    from tests.conftest import make_stream
+
+    stream, cfg = make_stream(rng, 32, 120, 16, 0.1)
+    for K in (1, 4, 32):
+        res = mwm_blocked(stream, cfg, K=K)
+        idx = merge_host(stream, res, cfg)
+        weight = matching_weight(stream, idx)
+        exact = exact_mwm_weight(stream)
+        assert exact / max(weight, 1e-9) <= 4 + cfg.eps + 1e-3

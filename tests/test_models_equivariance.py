@@ -1,0 +1,104 @@
+"""Model-level invariants: EGNN E(n)-equivariance (hypothesis over random
+rotations/translations), equiformer z-rotation behavior, GIN permutation
+invariance of graph readout."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.data.pipeline import make_gnn_batch
+from repro.models import egnn, equiformer_v2, gin
+from repro.models.param import init_params
+
+
+def _rot(axis_angles):
+    a, b, c = axis_angles
+    Rz = np.array([[np.cos(a), -np.sin(a), 0], [np.sin(a), np.cos(a), 0], [0, 0, 1]])
+    Ry = np.array([[np.cos(b), 0, np.sin(b)], [0, 1, 0], [-np.sin(b), 0, np.cos(b)]])
+    Rx = np.array([[1, 0, 0], [0, np.cos(c), -np.sin(c)], [0, np.sin(c), np.cos(c)]])
+    return (Rz @ Ry @ Rx).astype(np.float32)
+
+
+@given(
+    st.tuples(*[st.floats(-3.1, 3.1) for _ in range(3)]),
+    st.tuples(*[st.floats(-5, 5) for _ in range(3)]),
+)
+@settings(max_examples=10, deadline=None)
+def test_egnn_en_equivariance(angles, shift):
+    cfg = egnn.EGNNConfig(n_layers=2, d_hidden=16, d_in=8)
+    params = init_params(egnn.param_specs(cfg), jax.random.key(0))
+    batch = make_gnn_batch(24, 80, 8, d_out=1, coords=True, seed=2)
+    R = jnp.asarray(_rot(angles))
+    t = jnp.asarray(np.asarray(shift, np.float32))
+    h1, x1 = egnn.forward(params, batch, cfg)
+    rotated = dataclasses.replace(batch, coords=batch.coords @ R.T + t)
+    h2, x2 = egnn.forward(params, rotated, cfg)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=2e-3)
+    np.testing.assert_allclose(
+        np.asarray(x1 @ R.T + t), np.asarray(x2), atol=2e-3
+    )
+
+
+def test_equiformer_scalar_z_rotation_invariance():
+    """The l=0 output channel is invariant under rotations about z (the
+    exactly-implemented part of the eSCN alignment; see DESIGN.md §7)."""
+    cfg = equiformer_v2.EqV2Config(n_layers=2, d_hidden=16, l_max=3, d_in=8)
+    params = init_params(equiformer_v2.param_specs(cfg), jax.random.key(1))
+    batch = make_gnn_batch(20, 60, 8, d_out=1, coords=True, seed=3)
+    th = 1.1
+    Rz = jnp.asarray(_rot((th, 0, 0)))
+    out1 = equiformer_v2.forward(params, batch, cfg)
+    rotated = dataclasses.replace(batch, coords=batch.coords @ Rz.T)
+    out2 = equiformer_v2.forward(params, rotated, cfg)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), atol=2e-3)
+
+
+def test_gin_graph_readout_permutation_invariance():
+    cfg = gin.GINConfig(n_layers=2, d_hidden=16, d_in=8, n_classes=4)
+    params = init_params(gin.param_specs(cfg), jax.random.key(2))
+    batch = make_gnn_batch(30, 90, 8, n_classes=4, n_graphs=3, seed=4)
+    logits1 = gin.graph_logits(params, batch, cfg, n_graphs=3)
+    # permute node order
+    perm = np.random.default_rng(5).permutation(30)
+    inv = np.argsort(perm)
+    import dataclasses as dc
+
+    pb = dc.replace(
+        batch,
+        node_feats=batch.node_feats[perm],
+        node_mask=batch.node_mask[perm],
+        graph_ids=batch.graph_ids[perm],
+        src=jnp.asarray(inv)[batch.src],
+        dst=jnp.asarray(inv)[batch.dst],
+        labels=batch.labels[perm],
+        label_mask=batch.label_mask[perm],
+    )
+    logits2 = gin.graph_logits(params, pb, cfg, n_graphs=3)
+    np.testing.assert_allclose(
+        np.asarray(logits1), np.asarray(logits2), atol=1e-4
+    )
+
+
+def test_embedding_bag_matches_manual():
+    from repro.models.embedding import embedding_bag, embedding_bag_ragged
+
+    rng = np.random.default_rng(6)
+    table = jnp.asarray(rng.normal(size=(50, 8)), jnp.float32)
+    ids = jnp.asarray(rng.integers(0, 50, (4, 6)), jnp.int32)
+    valid = jnp.asarray(rng.random((4, 6)) > 0.3)
+    got = embedding_bag(table, ids, mode="mean", valid=valid)
+    want = np.zeros((4, 8))
+    for b in range(4):
+        rows = [np.asarray(table[ids[b, j]]) for j in range(6) if valid[b, j]]
+        want[b] = np.mean(rows, axis=0) if rows else 0
+    np.testing.assert_allclose(np.asarray(got), want, atol=1e-5)
+    flat = ids.reshape(-1)
+    seg = jnp.repeat(jnp.arange(4), 6)
+    got_r = embedding_bag_ragged(table, flat, seg, 4, mode="sum")
+    want_r = np.zeros((4, 8))
+    for b in range(4):
+        for j in range(6):
+            want_r[b] += np.asarray(table[ids[b, j]])
+    np.testing.assert_allclose(np.asarray(got_r), want_r, atol=1e-4)

@@ -1,0 +1,110 @@
+"""Transformer internals: attention variants, MoE fold/groups, unroll==scan."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.param import init_params
+from repro.models.transformer import (
+    TransformerConfig,
+    _moe_ffn,
+    attention,
+    loss_fn,
+    param_specs,
+)
+
+BASE = TransformerConfig(
+    name="t", n_layers=2, d_model=64, n_heads=4, n_kv=2, d_head=16, d_ff=96,
+    vocab=257, attn_chunk=8, loss_chunk=16, param_dtype=jnp.float32,
+)
+
+
+def _naive_attention(q, k, v, causal=True):
+    B, S, Hq, D = q.shape
+    Hk = k.shape[2]
+    G = Hq // Hk
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q.reshape(B, S, Hk, G, D), k) / np.sqrt(D)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, -1)
+    return jnp.einsum("bhgqk,bkhd->bqhgd", p, v).reshape(B, S, Hq, D)
+
+
+@pytest.mark.parametrize("par,chunk,unroll", [
+    (1, 8, False), (1, 8, True), (2, 4, False), (4, 8, True), (8, 4, False),
+])
+def test_attention_variants_match_naive(par, chunk, unroll):
+    cfg = dataclasses.replace(BASE, attn_chunk=chunk, attn_par=par, unroll=unroll)
+    B, S, Hq, Hk, D = 2, 32, 4, 2, 16
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (B, S, Hq, D))
+    k = jax.random.normal(ks[1], (B, S, Hk, D))
+    v = jax.random.normal(ks[2], (B, S, Hk, D))
+    got = attention(q, k, v, cfg)
+    want = _naive_attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_loss_unroll_equals_scan():
+    cfg_scan = dataclasses.replace(BASE, unroll=False)
+    cfg_unroll = dataclasses.replace(BASE, unroll=True)
+    params = init_params(param_specs(BASE), jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (2, 32), 0, BASE.vocab)
+    l1 = loss_fn(params, toks, cfg_scan)
+    l2 = loss_fn(params, toks, cfg_unroll)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-5)
+
+
+def test_moe_groups_respect_capacity():
+    cfg = dataclasses.replace(
+        BASE, n_experts=4, top_k=2, moe_groups=4, capacity_factor=1.0
+    )
+    params = init_params(param_specs(cfg), jax.random.key(2))
+    lp = jax.tree_util.tree_map(lambda a: a[0], params["layers"])
+    x = jax.random.normal(jax.random.key(3), (64, cfg.d_model))
+    out = _moe_ffn(x, lp["router"], lp["w1"], lp["w2"], cfg)
+    assert out.shape == x.shape
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_moe_expert_fold_equivalence():
+    """fold=2 with block-partitioned weights == fold=1 exactly."""
+    E, d, ff, k = 4, 32, 48, 2
+    cfg1 = dataclasses.replace(
+        BASE, d_model=d, d_ff=ff, n_experts=E, top_k=k, expert_fold=1,
+        act="swiglu", moe_groups=2,
+    )
+    cfg2 = dataclasses.replace(cfg1, expert_fold=2)
+    keys = jax.random.split(jax.random.key(4), 4)
+    router = jax.random.normal(keys[0], (d, E))
+    w1 = jax.random.normal(keys[1], (E, d, 2 * ff)) * 0.1
+    w2 = jax.random.normal(keys[2], (E, ff, d)) * 0.1
+    x = jax.random.normal(keys[3], (16, d))
+    out1 = _moe_ffn(x, router, w1, w2, cfg1)
+    # fold weights: gate/up halves split per fold, w2 rows split per fold
+    g, u = jnp.split(w1, 2, axis=-1)  # [E, d, ff] each
+    gs = jnp.split(g, 2, axis=-1)
+    us = jnp.split(u, 2, axis=-1)
+    w1f = jnp.stack(
+        [jnp.concatenate([gs[f], us[f]], -1) for f in range(2)], axis=1
+    ).reshape(E * 2, d, ff)
+    w2f = jnp.stack(jnp.split(w2, 2, axis=1), axis=1).reshape(E * 2, ff // 2, d)
+    out2 = _moe_ffn(x, router, w1f, w2f, cfg2)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), atol=1e-5)
+
+
+def test_moe_drops_overflow_tokens():
+    """capacity_factor < needed -> some tokens dropped, output finite."""
+    cfg = dataclasses.replace(
+        BASE, n_experts=2, top_k=2, capacity_factor=0.25, moe_groups=1
+    )
+    params = init_params(param_specs(cfg), jax.random.key(5))
+    lp = jax.tree_util.tree_map(lambda a: a[0], params["layers"])
+    x = jax.random.normal(jax.random.key(6), (64, cfg.d_model))
+    out = _moe_ffn(x, lp["router"], lp["w1"], lp["w2"], cfg)
+    assert np.isfinite(np.asarray(out)).all()
+    # with tiny capacity some token rows must be exactly zero
+    assert (np.abs(np.asarray(out)).sum(axis=1) == 0).any()
