@@ -1,9 +1,12 @@
 """Fig. 11: influence of substream count L. Paper: CS-SEQ degrades ~1/L,
 SC-OPT stays ~140M e/s because L rides the bit-parallel (here: lane) axis.
 The lane-parallel analogue is the vectorized scan/rounds: time should grow
-far slower than L."""
+far slower than L. Each L also reports the VMEM bit-block footprint of
+the packed vs unpacked layout — the §4.3 storage curve: packed bytes per
+vertex grow with ceil(L/8) while the unpacked layout pays max(L, 128)."""
 from benchmarks.common import make_workload, timed
 from repro.core import SubstreamConfig, mwm_rounds, mwm_scan
+from repro.kernels.substream_match.ops import max_vertices, vmem_plan
 
 
 def run(scale=11, eps_by_L=None):
@@ -17,4 +20,16 @@ def run(scale=11, eps_by_L=None):
         rows.append((f"fig11/scan/L={L}", dt * 1e6, f"{m/dt/1e6:.2f}Me/s"))
         dt, _ = timed(lambda: mwm_rounds(stream, cfg))
         rows.append((f"fig11/rounds/L={L}", dt * 1e6, f"{m/dt/1e6:.2f}Me/s"))
+        packed = vmem_plan(cfg.n, L, packed=True)
+        unpacked = vmem_plan(cfg.n, L, packed=False)
+        rows.append(
+            (
+                f"fig11/vmem/L={L}",
+                0.0,
+                f"packed={packed.bytes_per_vertex}B/v "
+                f"unpacked={unpacked.bytes_per_vertex}B/v "
+                f"capacity={max_vertices(L)}v "
+                f"({max_vertices(L)/max_vertices(L, packed=False):.0f}x)",
+            )
+        )
     return rows

@@ -17,14 +17,15 @@ def matching_kernel_roofline(L=64, eps=0.1):
     ~115M edges/s/core; the stream DMA needs 8 B/edge (0.9 GB/s) << HBM bw,
     matching the paper's conclusion that the pipeline, not DRAM, limits.
     """
-    n_pad, L_pad, nbytes = vmem_plan(2**15, L)
+    plan = vmem_plan(2**15, L, packed=True)
     cycles_per_edge = 8
     clock = 940e6
     edges_per_s = clock / cycles_per_edge
     return {
         "edges_per_s_bound": edges_per_s,
-        "vmem_bytes": nbytes,
-        "dma_bytes_per_edge": 8 + L_pad / 8 / 8,  # stream + amortized bits
+        "vmem_bytes": plan.nbytes,
+        # stream + amortized packed bit rows (width bytes per vertex touch)
+        "dma_bytes_per_edge": 8 + plan.width / 8,
     }
 
 

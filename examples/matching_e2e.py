@@ -71,9 +71,7 @@ def main():
         print(f"exact={exact:.1f} ratio={exact/weight:.3f} <= {4+args.eps}")
     # restart demo: restore part1 output and re-merge
     step, state = mgr.restore({"part1": {"assigned": res.assigned, "mb": res.mb}})
-    import dataclasses
-
-    res2 = dataclasses.replace(res, assigned=state["part1"]["assigned"])
+    res2 = res.with_assigned(state["part1"]["assigned"])
     idx2 = merge_host(stream, res2, cfg)
     assert (idx2 == idx).all()
     print(f"checkpoint restart at step {step}: merge reproduced exactly")

@@ -11,6 +11,7 @@ from repro.core import (
     mwm_pipeline,
 )
 from repro.graph.generators import kronecker_graph, uniform_weights
+from repro.kernels.substream_match.ops import max_vertices, vmem_plan
 
 
 def main():
@@ -29,6 +30,11 @@ def main():
     idx, weight = mwm_pipeline(stream, cfg)
     print(f"exact MWM weight {exact:.2f}; ratio {exact/weight:.3f} "
           f"(guarantee <= {4 + eps})")
+
+    plan = vmem_plan(cfg.n, cfg.L)
+    print(f"packed bit block: {plan.nbytes} B ({plan.width} B/vertex); "
+          f"single-core capacity at L={L}: {max_vertices(L):,} vertices "
+          f"({max_vertices(L) // max_vertices(L, packed=False)}x unpacked)")
 
 
 if __name__ == "__main__":

@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.core.bitpack import pack_bits, packed_width, unpack_bits
 from repro.core.types import (
     EdgeStream,
     MatchingResult,
@@ -59,6 +60,9 @@ __all__ = [
     "MatchingResult",
     "SubstreamConfig",
     "eligibility",
+    "pack_bits",
+    "packed_width",
+    "unpack_bits",
     "mwm_scan",
     "substream_matchings",
     "mwm_blocked",

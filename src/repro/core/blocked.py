@@ -71,4 +71,5 @@ def mwm_blocked(
         raise ValueError(f"unknown backend {backend!r}")
     m = stream.num_edges
     assigned = jnp.zeros((m,), jnp.int32).at[order].set(res.assigned)
-    return MatchingResult(assigned=assigned, mb=res.mb)
+    # keep whichever bit storage the backend produced (packed stays packed)
+    return res.with_assigned(assigned)

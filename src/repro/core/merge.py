@@ -19,7 +19,11 @@ from repro.core import matching as _matching
 def merge_host(
     stream: EdgeStream, result: MatchingResult, cfg: SubstreamConfig
 ) -> np.ndarray:
-    """Faithful Listing 1 Part 2. Returns indices (into the stream) of T."""
+    """Faithful Listing 1 Part 2. Returns indices (into the stream) of T.
+
+    Consumes only ``result.assigned`` — Part 2 never reads the matching
+    bits, so packed-storage results merge without ever unpacking ``mb``.
+    """
     src = np.asarray(stream.src)
     dst = np.asarray(stream.dst)
     assigned = np.asarray(result.assigned)
@@ -43,6 +47,7 @@ def merge_device(
 
     Re-orders the recorded edges by (descending i, stream position) and runs
     the same one-substream greedy scan. Bit-identical to `merge_host`.
+    Like `merge_host`, reads only ``result.assigned`` (packed-safe).
     """
     m = stream.num_edges
     assigned = result.assigned

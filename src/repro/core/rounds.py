@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core import bitpack
 from repro.core.types import EdgeStream, MatchingResult, SubstreamConfig
 
 _INF = jnp.iinfo(jnp.int32).max
@@ -33,11 +34,19 @@ def _vertex_min(pri_el: jax.Array, src, dst, n: int) -> jax.Array:
     return best
 
 
-@partial(jax.jit, static_argnames=("cfg", "max_rounds"))
+@partial(jax.jit, static_argnames=("cfg", "max_rounds", "packed"))
 def mwm_rounds(
-    stream: EdgeStream, cfg: SubstreamConfig, max_rounds: int = 0
+    stream: EdgeStream, cfg: SubstreamConfig, max_rounds: int = 0,
+    packed: bool = False,
 ) -> MatchingResult:
-    """Parallel-rounds equivalent of Listing 1 Part 1 (single device)."""
+    """Parallel-rounds equivalent of Listing 1 Part 1 (single device).
+
+    ``packed=True`` ships the final bits in the uint8 bit-plane storage of
+    :mod:`repro.core.bitpack` (8x smaller to keep/checkpoint/transfer);
+    the round state itself stays bool — the conflict resolution needs
+    per-substream scatters, not bitwise words. Unpacking the result is
+    bit-identical to the dense output.
+    """
     thr = cfg.thresholds()
     m = stream.num_edges
     src = stream.src.astype(jnp.int32)
@@ -71,6 +80,10 @@ def mwm_rounds(
     assigned = jnp.where(
         added, jax.lax.broadcasted_iota(jnp.int32, added.shape, 1), -1
     ).max(axis=1)
+    if packed:
+        return MatchingResult(
+            assigned=assigned, mb_packed=bitpack.pack_bits(mb), L=cfg.L
+        )
     return MatchingResult(assigned=assigned, mb=mb)
 
 
@@ -91,7 +104,8 @@ def mwm_rounds_sharded(
 
     def local(src, dst, w, valid, thr):
         m_loc = src.shape[0]
-        n_edge_shards = jax.lax.axis_size(edge_axis)
+        # jax.lax.axis_size only exists in newer jax; psum(1) is portable
+        n_edge_shards = jax.lax.psum(jnp.int32(1), edge_axis)
         shard_id = jax.lax.axis_index(edge_axis)
         # global stream position = shard_id * m_loc + local position
         pri = (shard_id * m_loc + jnp.arange(m_loc)).astype(jnp.int32)

@@ -15,6 +15,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import bitpack
+
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
@@ -67,6 +69,10 @@ class SubstreamConfig:
     n: int = dataclasses.field(metadata=dict(static=True))
     L: int = dataclasses.field(metadata=dict(static=True))
     eps: float = dataclasses.field(default=0.1, metadata=dict(static=True))
+    # Matching-bit storage layout: "packed" (uint8 bit planes, the §4.3
+    # BRAM-word analogue — 8x the VMEM capacity) or "unpacked" (one int8
+    # per bit; the legacy fallback). Consumed by kernels/substream_match.
+    mb_layout: str = dataclasses.field(default="packed", metadata=dict(static=True))
 
     def thresholds(self) -> jax.Array:
         """[L] array of substream admission thresholds (1+eps)^i."""
@@ -78,19 +84,101 @@ class SubstreamConfig:
         return float((1.0 + self.eps) ** self.L)
 
 
-@jax.tree_util.register_dataclass
-@dataclasses.dataclass(frozen=True)
 class MatchingResult:
     """Output of Part 1 (stream processing).
 
     ``assigned`` int32 [m]: the substream index whose list ``C[i]`` records
     the edge (the *highest* eligible substream where both endpoints were
-    free), or -1 if the edge entered no list. ``mb`` bool [n, L]: final
-    matching bits.
+    free), or -1 if the edge entered no list.
+
+    The matching bits are held in ONE of two storages:
+
+    * ``mb`` bool [n, L] — the dense view every pre-existing caller reads;
+    * ``mb_packed`` uint8 [n, ceil(L/8)] — the bit-plane layout of
+      :mod:`repro.core.bitpack` (the paper's §4.3 BRAM word).
+
+    ``.mb`` is always readable: when only the packed storage is present it
+    is unpacked lazily on access (outside any jit), so packed producers
+    don't break dense consumers. ``.packed()`` is the mirror-image accessor.
+    ``L`` (static) records the logical substream count; it is required to
+    trim the last byte's padding bits when unpacking.
     """
 
-    assigned: jax.Array
-    mb: jax.Array
+    __slots__ = ("assigned", "_mb", "_mb_packed", "_L")
+
+    def __init__(self, assigned, mb=None, mb_packed=None, L=None):
+        if mb is None and mb_packed is None:
+            raise ValueError("MatchingResult needs mb or mb_packed")
+        if L is None:
+            if mb is None:
+                # W*8 would silently invent up to 7 phantom substreams
+                raise ValueError(
+                    "L is required when only mb_packed is given "
+                    "(the packed width cannot recover L when L % 8 != 0)"
+                )
+            L = mb.shape[-1]
+        object.__setattr__(self, "assigned", assigned)
+        object.__setattr__(self, "_mb", mb)
+        object.__setattr__(self, "_mb_packed", mb_packed)
+        object.__setattr__(self, "_L", int(L))
+
+    def __setattr__(self, name, value):  # immutable, like the old frozen dataclass
+        raise dataclasses.FrozenInstanceError(f"cannot assign to field {name!r}")
+
+    @property
+    def L(self) -> int:
+        return self._L
+
+    @property
+    def mb(self) -> jax.Array:
+        """bool [n, L] dense matching bits (lazily unpacked if packed)."""
+        if self._mb is not None:
+            return self._mb if self._mb.dtype == bool else self._mb.astype(bool)
+        return bitpack.unpack_bits(self._mb_packed, self._L)
+
+    @property
+    def mb_packed(self) -> Optional[jax.Array]:
+        """uint8 [n, ceil(L/8)] packed storage, or None if produced dense."""
+        return self._mb_packed
+
+    @property
+    def is_packed(self) -> bool:
+        return self._mb_packed is not None
+
+    def packed(self) -> jax.Array:
+        """uint8 [n, ceil(L/8)] packed bits (packing the dense view if needed)."""
+        if self._mb_packed is not None:
+            return self._mb_packed
+        return bitpack.pack_bits(self.mb)
+
+    def with_assigned(self, assigned) -> "MatchingResult":
+        """Same bit storage, different ``assigned`` (e.g. un-permuted)."""
+        return MatchingResult(
+            assigned, mb=self._mb, mb_packed=self._mb_packed, L=self._L
+        )
+
+    def __repr__(self) -> str:
+        store = "packed" if self.is_packed else "dense"
+        return f"MatchingResult(assigned={self.assigned!r}, storage={store}, L={self._L})"
+
+
+def _matching_result_flatten(r: MatchingResult):
+    return (r.assigned, r._mb, r._mb_packed), (r._L,)
+
+
+def _matching_result_unflatten(aux, children):
+    assigned, mb, mb_packed = children
+    obj = object.__new__(MatchingResult)
+    object.__setattr__(obj, "assigned", assigned)
+    object.__setattr__(obj, "_mb", mb)
+    object.__setattr__(obj, "_mb_packed", mb_packed)
+    object.__setattr__(obj, "_L", aux[0])
+    return obj
+
+
+jax.tree_util.register_pytree_node(
+    MatchingResult, _matching_result_flatten, _matching_result_unflatten
+)
 
 
 def eligibility(weights: jax.Array, thresholds: jax.Array) -> jax.Array:

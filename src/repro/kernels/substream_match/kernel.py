@@ -4,8 +4,12 @@ TPU mapping of the FPGA design:
 
   FPGA                                   TPU (this kernel)
   ------------------------------------   --------------------------------
-  BRAM-resident matching bits            VMEM scratch  mb[n_pad, L_pad] i8
-  L-bit bit-parallel matching word       one vector row, L on the lane axis
+  BRAM-resident matching bits            VMEM scratch; packed layout
+                                         mb[n_pad, ceil(L/8)] u8 (default)
+                                         or unpacked mb[n_pad, L_pad] i8
+  L-bit bit-parallel matching word       packed: 8 substreams per uint8
+                                         lane word (the §4.3 BRAM word);
+                                         unpacked: L on the lane axis
   1 edge / cycle pipeline                lax.fori_loop, 1 edge / iteration
   DRAM edge stream + prefetch            HBM->VMEM BlockSpec pipeline over
                                          edge blocks (double-buffered by
@@ -18,8 +22,23 @@ Stage map (Listing 2): Stage 1-3 = row loads (pl.load, dynamic slice),
 Stage 4 = threshold compare (te), Stage 5 = matching update, Stage 6 =
 row stores, Stage 7 = highest-set-bit, Stage 8 = assigned-index store.
 
-Capacity: the bit block must fit VMEM: n_pad * L_pad bytes (int8).
-For larger graphs the vertex set is partitioned across devices and the
+Packed path details: eligibility is evaluated per *bit plane* — the
+thresholds arrive as [8, W_pad] f32 where row j, word k holds substream
+8k+j's threshold (+inf in padding slots), so `w >= thr` directly yields
+the 8 bit planes of the L-bit eligibility word and an 8-way shift-OR
+assembles the uint8 mask. The free test / matching update become single
+bitwise ops on uint8 rows (te & ~mb[u] & ~mb[v]); Stage 7's highest set
+bit is an 8-way shift-mask reduction over lane-index*8 + bit.
+
+Capacity: the bit block must fit VMEM: n_pad * ceil(L/8) bytes packed
+(8x the unpacked n_pad * L_pad budget of the int8 layout). Physical-TPU
+note: uint8 tiles are (32, 128), so to realize the full win on hardware
+when ceil(L/8) < 128 the row is folded vertex-major — G = 128 // W_pad
+vertices share one 128-lane row (u selects row u // G, byte offset
+(u % G) * W_pad). The interpret-mode kernel keeps the simple
+[n_pad, W_pad] layout; ops.vmem_plan reports the logical packed bytes
+either way. For
+larger graphs the vertex set is partitioned across devices and the
 parallel-rounds path (repro.core.rounds) stitches partitions together;
 within a partition this kernel is the inner engine.
 
@@ -34,6 +53,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+# jax renamed TPUCompilerParams -> CompilerParams around 0.5; accept both
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
 
 
 def _kernel(edges_ref, w_ref, thr_ref, assigned_ref, mb_out_ref, mb, *, block_e: int):
@@ -78,6 +100,58 @@ def _kernel(edges_ref, w_ref, thr_ref, assigned_ref, mb_out_ref, mb, *, block_e:
         mb_out_ref[...] = mb[...]
 
 
+def _kernel_packed(
+    edges_ref, w_ref, thr_ref, assigned_ref, mb_out_ref, mb, *, block_e: int
+):
+    """Packed bit-plane edge processor: mb rows are uint8 words of 8 bits."""
+    b = pl.program_id(0)
+    nblocks = pl.num_programs(0)
+
+    @pl.when(b == 0)
+    def _init():
+        mb[...] = jnp.zeros_like(mb)
+
+    W_pad = mb.shape[1]
+    thr = thr_ref[...]  # [8, W_pad] f32; +inf in padding slots
+    lane = jax.lax.broadcasted_iota(jnp.int32, (W_pad,), 0)
+
+    def body(i, _):
+        # Stage 1: unpack edge, compute row addresses
+        u = edges_ref[i, 0]
+        v = edges_ref[i, 1]
+        w = w_ref[i, 0]
+        # Stage 2-3: row loads (BRAM -> register in the paper)
+        mbu = pl.load(mb, (pl.ds(u, 1), slice(None)))[0]  # [W_pad] u8
+        mbv = pl.load(mb, (pl.ds(v, 1), slice(None)))[0]
+        # Stage 4: assemble the L-bit eligibility word from its 8 bit planes
+        planes = w >= thr  # [8, W_pad] bool; plane j = substreams 8k+j
+        te = jnp.zeros((W_pad,), jnp.uint8)
+        for j in range(8):
+            te |= planes[j].astype(jnp.uint8) << j
+        te = jnp.where(u != v, te, jnp.uint8(0))  # self-loops never match
+        # Stage 5: compute the matchings — one bitwise op per 8 substreams
+        add = te & ~mbu & ~mbv
+        # Stage 6: write u/v bits back (v second: self-loop-safe, add=0 there)
+        pl.store(mb, (pl.ds(u, 1), slice(None)), (mbu | add)[None])
+        mbv2 = pl.load(mb, (pl.ds(v, 1), slice(None)))[0]
+        pl.store(mb, (pl.ds(v, 1), slice(None)), (mbv2 | add)[None])
+        # Stage 7: highest set bit via shift-mask reduction over bit planes
+        addi = add.astype(jnp.int32)
+        idx = jnp.int32(-1)
+        for j in range(8):
+            hit = (addi >> j) & 1
+            idx = jnp.maximum(idx, jnp.max(jnp.where(hit > 0, 8 * lane + j, -1)))
+        # Stage 8: emit assignment
+        assigned_ref[i, 0] = idx
+        return 0
+
+    jax.lax.fori_loop(0, block_e, body, 0, unroll=False)
+
+    @pl.when(b == nblocks - 1)
+    def _flush():
+        mb_out_ref[...] = mb[...]
+
+
 def substream_match_pallas(
     edges: jax.Array,  # int32 [m_pad, 2]
     weights: jax.Array,  # f32/bf16 [m_pad, 1]; <= 0 marks padding edges
@@ -86,7 +160,10 @@ def substream_match_pallas(
     block_e: int = 1024,
     interpret: bool = True,
 ):
-    """Raw pallas_call wrapper. See ops.substream_match for the typed API."""
+    """Raw pallas_call wrapper, unpacked int8 layout (legacy fallback).
+
+    See ops.substream_match for the typed API and the packed default.
+    """
     m_pad = edges.shape[0]
     assert m_pad % block_e == 0, (m_pad, block_e)
     L_pad = thresholds.shape[1]
@@ -112,7 +189,52 @@ def substream_match_pallas(
         ],
         scratch_shapes=[pltpu.VMEM((n_pad, L_pad), jnp.int8)],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary",),
+        ),
+    )(edges, weights.astype(jnp.float32), thresholds)
+    return assigned[:, 0], mb
+
+
+def substream_match_pallas_packed(
+    edges: jax.Array,  # int32 [m_pad, 2]
+    weights: jax.Array,  # f32/bf16 [m_pad, 1]; <= 0 marks padding edges
+    thresholds: jax.Array,  # f32 [8, W_pad]; thr[j, k] = substream 8k+j, +inf pads
+    n_pad: int,
+    block_e: int = 1024,
+    interpret: bool = True,
+):
+    """Raw pallas_call wrapper, packed uint8 bit-plane layout (default path).
+
+    Returns (assigned int32 [m_pad], mb_packed uint8 [n_pad, W_pad]).
+    """
+    m_pad = edges.shape[0]
+    assert m_pad % block_e == 0, (m_pad, block_e)
+    assert thresholds.shape[0] == 8, thresholds.shape
+    W_pad = thresholds.shape[1]
+    nblocks = m_pad // block_e
+    grid = (nblocks,)
+
+    kernel = functools.partial(_kernel_packed, block_e=block_e)
+    assigned, mb = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_e, 2), lambda b: (b, 0)),  # edge block (pipelined)
+            pl.BlockSpec((block_e, 1), lambda b: (b, 0)),  # weight block
+            pl.BlockSpec((8, W_pad), lambda b: (0, 0)),  # bit-plane thresholds
+        ],
+        out_specs=[
+            pl.BlockSpec((block_e, 1), lambda b: (b, 0)),
+            pl.BlockSpec((n_pad, W_pad), lambda b: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m_pad, 1), jnp.int32),
+            jax.ShapeDtypeStruct((n_pad, W_pad), jnp.uint8),
+        ],
+        scratch_shapes=[pltpu.VMEM((n_pad, W_pad), jnp.uint8)],
+        interpret=interpret,
+        compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary",),
         ),
     )(edges, weights.astype(jnp.float32), thresholds)

@@ -1,49 +1,150 @@
-"""Typed / padded entry point for the substream_match Pallas kernel."""
+"""Typed / padded entry point for the substream_match Pallas kernel.
+
+VMEM accounting (the §4.3 "storage" analysis, TPU edition)
+----------------------------------------------------------
+A TPU v5e core has ~16 MiB of VMEM (``VMEM_PER_CORE``). Of that we
+reserve ``VMEM_BIT_BUDGET`` (12 MiB) for the resident matching-bit
+block and leave the remainder for the edge-stream double buffers that
+the Pallas grid pipeline allocates (edges + weights in, assigned out).
+
+Two matching-bit layouts are supported (see :mod:`repro.core.bitpack`):
+
+* ``packed`` (default) — ``mb[n_pad, ceil(L/8)]`` uint8, bit ``j`` of
+  word ``k`` = substream ``8k + j``. One byte stores 8 substreams, the
+  direct analogue of the paper's L-bit BRAM word; capacity per core is
+  8x the unpacked layout (≥ 8x more vertices at any L; 16x at L = 64,
+  where the unpacked layout also pays lane padding 64 -> 128).
+* ``unpacked`` — ``mb[n_pad, L_pad]`` int8, one byte per substream bit.
+  Legacy fallback, selected with ``SubstreamConfig(mb_layout="unpacked")``
+  or ``substream_match(..., packed=False)``.
+
+:func:`vmem_plan` is the single source of truth for the block geometry:
+it reports the padded shape and byte footprint of the bit block for
+either layout and auto-picks ``block_e`` — the edge-block length — from
+the VMEM budget the bit block leaves free. Both the kernel wrapper and
+the capacity benchmarks (`benchmarks/table6_memory.py`) consume it.
+"""
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import bitpack
 from repro.core.types import EdgeStream, MatchingResult, SubstreamConfig
 from repro.kernels.substream_match import kernel as _kernel
 
-# v5e VMEM is ~128 MiB/core? No — ~16 MiB usable; leave headroom for the
-# edge-block double buffers.
-VMEM_BIT_BUDGET = 12 * 2**20  # bytes for the matching-bit block
+VMEM_PER_CORE = 16 * 2**20  # usable VMEM on a v5e core
+VMEM_BIT_BUDGET = 12 * 2**20  # bytes reserved for the matching-bit block
+_EDGE_BYTES = 2 * (2 * 4 + 4 + 4)  # (src,dst) i32 + w f32 + assigned i32, x2 buffers
 
 
 def _round_up(x: int, mult: int) -> int:
     return ((x + mult - 1) // mult) * mult
 
 
-def vmem_plan(n: int, L: int) -> tuple[int, int, int]:
-    """(n_pad, L_pad, bytes) of the VMEM matching-bit block."""
-    L_pad = _round_up(max(L, 1), 128)
+@dataclasses.dataclass(frozen=True)
+class VmemPlan:
+    """Geometry + budget of the VMEM matching-bit block.
+
+    ``width`` is the padded per-vertex row in bytes (``L_pad`` int8 lanes
+    unpacked; ``ceil(L/8)`` rounded up to 8 uint8 words packed), ``words``
+    the logical (unpadded) row length, ``nbytes = n_pad * width`` the block
+    footprint, and ``block_e`` the auto-picked edge-block length (see
+    :func:`vmem_plan` for the selection rule).
+    """
+
+    n_pad: int
+    width: int
+    words: int
+    nbytes: int
+    block_e: int
+    packed: bool
+
+    @property
+    def bytes_per_vertex(self) -> int:
+        return self.width
+
+
+def vmem_plan(
+    n: int,
+    L: int,
+    packed: bool = True,
+    block_e: int | None = None,
+    m: int | None = None,
+) -> VmemPlan:
+    """Plan the VMEM bit block for ``n`` vertices and ``L`` substreams.
+
+    The auto ``block_e`` is min over three constraints (power of two,
+    floor 128): the VMEM the bit block leaves free at ``_EDGE_BYTES``
+    per edge, an 8192 cap bounding per-program pipeline latency, and —
+    when the stream length ``m`` is given — the smallest power of two
+    covering ``m``, so short streams are not padded to a huge block.
+    Since the bit block is capped at 12 of 16 MiB, at least 4 MiB stays
+    free and the VMEM constraint only binds below ~256 KiB of headroom;
+    in practice the 8192 cap or ``m`` decides.
+    """
     n_pad = _round_up(max(n, 1), 8)
-    return n_pad, L_pad, n_pad * L_pad
+    if packed:
+        words = bitpack.packed_width(max(L, 1))
+        width = _round_up(words, 8)
+    else:
+        words = max(L, 1)
+        width = _round_up(words, 128)
+    nbytes = n_pad * width
+    if block_e is None:
+        free = max(VMEM_PER_CORE - min(nbytes, VMEM_BIT_BUDGET), 2**20)
+        block_e = 1 << ((free // _EDGE_BYTES).bit_length() - 1)
+        block_e = min(block_e, 8192)
+        if m is not None:
+            block_e = min(block_e, 1 << max(m - 1, 1).bit_length())
+        block_e = max(128, block_e)
+    return VmemPlan(
+        n_pad=n_pad, width=width, words=words, nbytes=nbytes,
+        block_e=block_e, packed=packed,
+    )
 
 
-@partial(jax.jit, static_argnames=("cfg", "block_e", "interpret"))
+def max_vertices(L: int, packed: bool = True, budget: int = VMEM_BIT_BUDGET) -> int:
+    """Largest vertex count whose bit block fits ``budget`` bytes."""
+    width = vmem_plan(1, L, packed=packed).width
+    return (budget // width) // 8 * 8
+
+
+@partial(jax.jit, static_argnames=("cfg", "block_e", "interpret", "packed"))
 def substream_match(
     stream: EdgeStream,
     cfg: SubstreamConfig,
-    block_e: int = 1024,
+    block_e: int | None = None,
     interpret: bool = True,
+    packed: bool | None = None,
 ) -> MatchingResult:
     """Run Part 1 on the given stream order via the Pallas kernel.
+
+    ``packed=None`` follows ``cfg.mb_layout``; ``block_e=None`` takes the
+    auto-picked value from :func:`vmem_plan`. The packed result carries
+    ``mb_packed`` (uint8 bit planes) and unpacks to the bool ``mb`` view
+    lazily; both layouts are bit-identical in ``assigned`` and ``mb``.
 
     Raises at trace time if the bit block exceeds the VMEM budget — at that
     size the caller must vertex-partition (core.rounds) instead.
     """
-    n_pad, L_pad, nbytes = vmem_plan(cfg.n, cfg.L)
-    if nbytes > VMEM_BIT_BUDGET:
+    if packed is None:
+        if cfg.mb_layout not in ("packed", "unpacked"):
+            raise ValueError(f"unknown mb_layout {cfg.mb_layout!r}")
+        packed = cfg.mb_layout != "unpacked"
+    plan = vmem_plan(
+        cfg.n, cfg.L, packed=packed, block_e=block_e, m=stream.num_edges
+    )
+    if plan.nbytes > VMEM_BIT_BUDGET:
         raise ValueError(
-            f"matching-bit block {nbytes/2**20:.1f} MiB > VMEM budget; "
+            f"matching-bit block {plan.nbytes/2**20:.1f} MiB > VMEM budget; "
             f"use repro.core.rounds with vertex partitioning"
         )
+    block_e = plan.block_e
     m = stream.num_edges
     m_pad = _round_up(m, block_e)
     pad = m_pad - m
@@ -55,10 +156,25 @@ def substream_match(
         edges = jnp.concatenate([edges, jnp.zeros((pad, 2), jnp.int32)])
         w = jnp.concatenate([w, jnp.zeros((pad,), jnp.float32)])
     thr = cfg.thresholds()
-    thr_pad = jnp.full((1, L_pad), jnp.inf, jnp.float32).at[0, : cfg.L].set(thr)
 
+    if packed:
+        # bit-plane thresholds: thr_bits[j, k] = threshold of substream 8k+j
+        nbits = plan.width * 8
+        thr_flat = jnp.full((nbits,), jnp.inf, jnp.float32).at[: cfg.L].set(thr)
+        thr_bits = thr_flat.reshape(plan.width, 8).T
+        assigned, mb = _kernel.substream_match_pallas_packed(
+            edges, w[:, None], thr_bits, plan.n_pad,
+            block_e=block_e, interpret=interpret,
+        )
+        return MatchingResult(
+            assigned=assigned[:m],
+            mb_packed=mb[: cfg.n, : plan.words],
+            L=cfg.L,
+        )
+
+    thr_pad = jnp.full((1, plan.width), jnp.inf, jnp.float32).at[0, : cfg.L].set(thr)
     assigned, mb = _kernel.substream_match_pallas(
-        edges, w[:, None], thr_pad, n_pad, block_e=block_e, interpret=interpret
+        edges, w[:, None], thr_pad, plan.n_pad, block_e=block_e, interpret=interpret
     )
     return MatchingResult(
         assigned=assigned[:m], mb=mb[: cfg.n, : cfg.L].astype(bool)

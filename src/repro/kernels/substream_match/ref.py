@@ -40,3 +40,48 @@ def substream_match_ref(
     mb0 = jnp.zeros((n, L), jnp.int8)
     mb, assigned = jax.lax.scan(step, mb0, (src, dst, weight))
     return assigned, mb
+
+
+def substream_match_ref_packed(
+    src: jax.Array,  # int32 [m]
+    dst: jax.Array,  # int32 [m]
+    weight: jax.Array,  # float [m]; <= 0 encodes padding/invalid
+    thresholds: jax.Array,  # float32 [L]
+    n: int,
+):
+    """Packed-word oracle: the same scan, but the state is the uint8
+    bit-plane word of :mod:`repro.core.bitpack` and every per-edge update is
+    a bitwise op on ceil(L/8) words — an independent re-derivation of the
+    packed Pallas kernel's bit logic (not a pack() of the dense oracle).
+
+    Returns (assigned int32 [m], mb_packed uint8 [n, ceil(L/8)]).
+    """
+    from repro.core import bitpack
+
+    L = thresholds.shape[0]
+    W = bitpack.packed_width(L)
+    nbits = W * bitpack.BITS
+    thr_flat = jnp.full((nbits,), jnp.inf, jnp.float32).at[:L].set(thresholds)
+    thr_bits = thr_flat.reshape(W, bitpack.BITS)  # [W, 8]; [k, j] = substream 8k+j
+    shifts = jnp.arange(bitpack.BITS, dtype=jnp.uint8)
+    bitval = (jnp.uint8(1) << shifts).astype(jnp.uint8)
+    bitidx = 8 * jnp.arange(W, dtype=jnp.int32)[:, None] + jnp.arange(
+        bitpack.BITS, dtype=jnp.int32
+    )
+
+    def step(mb, e):
+        u, v, w = e
+        u = u.astype(jnp.int32)
+        v = v.astype(jnp.int32)
+        planes = (w.astype(jnp.float32) >= thr_bits) & (u != v)  # [W, 8]
+        te = (planes.astype(jnp.uint8) * bitval).sum(-1).astype(jnp.uint8)  # [W]
+        add = te & ~mb[u] & ~mb[v]
+        mb = mb.at[u].set(mb[u] | add)
+        mb = mb.at[v].set(mb[v] | add)
+        hit = ((add[:, None] >> shifts) & jnp.uint8(1)) > 0  # [W, 8]
+        idx = jnp.where(hit, bitidx, -1).max()
+        return mb, idx
+
+    mb0 = jnp.zeros((n, W), jnp.uint8)
+    mb, assigned = jax.lax.scan(step, mb0, (src, dst, weight))
+    return assigned, mb

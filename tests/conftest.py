@@ -1,5 +1,24 @@
+import pathlib
+import sys
+
 import numpy as np
 import pytest
+
+# Make `import repro` work even when PYTHONPATH=src was not exported
+# (plain `pytest` from the repo root).
+_SRC = str(pathlib.Path(__file__).resolve().parent.parent / "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+# Property tests want the real hypothesis (declared in requirements.txt);
+# in hermetic containers without it, fall back to the deterministic
+# minihyp shim so the suite still collects and runs.
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    from repro.testing import minihyp
+
+    minihyp.install()
 
 
 @pytest.fixture

@@ -14,8 +14,11 @@ from repro.core import (
     mwm_rounds,
     mwm_scan,
     mwm_pipeline,
+    pack_bits,
     substream_matchings,
+    unpack_bits,
 )
+from repro.kernels.substream_match.ops import substream_match
 
 SETTINGS = dict(max_examples=20, deadline=None)
 
@@ -62,6 +65,50 @@ def test_substream_matchings_are_matchings_and_maximal(data):
             assert res[src[e], i] or res[dst[e], i]
 
 
+def _small_stream(draw):
+    """Like _stream but kernel-sized (the Pallas interpreter retraces per
+    shape) and biased to exercise the packed layout's edge cases: L not
+    divisible by 8, self-loops (src == dst draws) and padding edges."""
+    n = draw(st.integers(8, 32))
+    m = draw(st.integers(1, 60))
+    L = draw(st.sampled_from([1, 4, 9, 16, 33]))
+    eps = draw(st.sampled_from([0.1, 0.5]))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    cfg = SubstreamConfig(n=n, L=L, eps=eps)
+    src = rng.integers(0, n, m)
+    dst = rng.integers(0, n, m)  # self-loops and duplicates allowed
+    w = rng.uniform(0.5, cfg.w_max * 1.1, m).astype(np.float32)
+    pad = draw(st.sampled_from([0, 5]))
+    return EdgeStream.from_numpy(src, dst, w, n_pad=m + pad), cfg
+
+
+@given(st.data())
+@settings(max_examples=8, deadline=None)
+def test_packed_layout_parity(data):
+    """Packed and unpacked kernels are bit-identical in `assigned` and the
+    unpacked `mb` view, and agree with the scan oracle."""
+    stream, cfg = _small_stream(data.draw)
+    want = mwm_scan(stream, cfg)
+    got_p = substream_match(stream, cfg, block_e=32, packed=True)
+    got_u = substream_match(stream, cfg, block_e=32, packed=False)
+    assert (np.asarray(got_p.assigned) == np.asarray(got_u.assigned)).all()
+    assert (np.asarray(got_p.assigned) == np.asarray(want.assigned)).all()
+    assert (np.asarray(got_p.mb) == np.asarray(got_u.mb)).all()
+    assert (np.asarray(got_p.mb) == np.asarray(want.mb)).all()
+    assert (np.asarray(got_p.mb_packed) == np.asarray(pack_bits(want.mb))).all()
+
+
+@given(st.data())
+@settings(**SETTINGS)
+def test_bitpack_roundtrip_property(data):
+    L = data.draw(st.integers(1, 70))
+    n = data.draw(st.integers(1, 40))
+    seed = data.draw(st.integers(0, 2**31 - 1))
+    mb = np.random.default_rng(seed).integers(0, 2, (n, L)).astype(bool)
+    assert (np.asarray(unpack_bits(pack_bits(mb), L)) == mb).all()
+
+
 @given(st.data())
 @settings(**SETTINGS)
 def test_rounds_equals_scan(data):
@@ -70,6 +117,10 @@ def test_rounds_equals_scan(data):
     b = mwm_rounds(stream, cfg)
     assert (np.asarray(a.assigned) == np.asarray(b.assigned)).all()
     assert (np.asarray(a.mb) == np.asarray(b.mb)).all()
+    # packed shipping format unpacks to the same bits
+    p = mwm_rounds(stream, cfg, packed=True)
+    assert p.is_packed
+    assert (np.asarray(p.mb) == np.asarray(a.mb)).all()
 
 
 @given(st.data())
