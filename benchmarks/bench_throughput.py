@@ -1,0 +1,168 @@
+"""Part-1 throughput: edges/sec per engine, the repo's perf trajectory.
+
+Compares the five Part-1 engines on Kronecker workloads:
+
+* ``scan``         — the CS-SEQ `lax.scan` oracle (1 edge / step);
+* ``pallas_edges`` — the paper-literal Pallas pipeline (1 edge / iter);
+* ``pallas_waves`` — the wave-vectorized Pallas pipeline (#waves iters
+  of [W, width] tile work; `schedule="waves"`);
+* ``waves_xla``    — the XLA wave reference (`mwm_waves`);
+* ``rounds``       — the propose–accept fixed point (`mwm_rounds`).
+
+Besides the CSV rows every benchmark emits, this one writes
+``BENCH_substream.json`` at the repo root — the measured perf record the
+acceptance gate reads (wave vs per-edge speedup, #waves per graph). The
+wave schedule is built once per graph on the host and its cost reported
+separately (it is reusable across L/eps sweeps and engine runs, like the
+§4.2 lexicographic pre-sort the paper already assumes).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import numpy as np
+
+from benchmarks.common import make_workload, timed
+from repro.core import mwm_rounds, mwm_scan
+from repro.core.matching import mwm_waves
+from repro.graph.waves import wave_schedule
+from repro.kernels.substream_match.ops import substream_match
+
+BENCH_PATH = pathlib.Path(__file__).resolve().parent.parent / "BENCH_substream.json"
+
+#: Acceptance gate: wave Pallas must beat per-edge Pallas by this factor
+#: in edges/sec at the default scales.
+TARGET_SPEEDUP = 5.0
+
+DEFAULT_SCALES = (10, 12)
+EDGE_FACTOR = 8
+L = 32
+EPS = 0.1
+
+
+def _bench_graph(scale: int, edge_factor: int, L: int, eps: float, reps: int):
+    stream, cfg = make_workload(scale, edge_factor, L, eps)
+    m = stream.num_edges
+
+    t_sched, schedule = timed(
+        lambda: wave_schedule(
+            np.asarray(stream.src),
+            np.asarray(stream.dst),
+            valid=np.asarray(stream.valid),
+        ),
+        reps=1,
+        warmup=0,
+    )
+
+    engines = {
+        "scan": lambda: mwm_scan(stream, cfg),
+        "pallas_edges": lambda: substream_match(stream, cfg, schedule="edges"),
+        "pallas_waves": lambda: substream_match(
+            stream, cfg, schedule="waves", waves=schedule
+        ),
+        "waves_xla": lambda: mwm_waves(stream, cfg, schedule=schedule),
+        "rounds": lambda: mwm_rounds(stream, cfg),
+    }
+    timings = {}
+    for name, fn in engines.items():
+        t, _ = timed(fn, reps=reps)
+        timings[name] = {
+            "seconds_per_call": t,
+            "edges_per_sec": m / t if t > 0 else float("inf"),
+        }
+    speedup = (
+        timings["pallas_waves"]["edges_per_sec"]
+        / timings["pallas_edges"]["edges_per_sec"]
+    )
+    return {
+        "scale": scale,
+        "n": cfg.n,
+        "m": m,
+        "L": L,
+        "eps": eps,
+        "num_waves": schedule.num_waves,
+        "wave_width": schedule.width,
+        "wave_fill": round(schedule.fill, 4),
+        "edges_per_wave": round(m / max(schedule.num_waves, 1), 1),
+        "schedule_seconds": t_sched,
+        "engines": timings,
+        "speedup_pallas_waves_vs_edges": round(speedup, 2),
+    }
+
+
+def run(scales=DEFAULT_SCALES, edge_factor=EDGE_FACTOR, L=L, eps=EPS, reps=3,
+        emit_json=True, path: pathlib.Path | None = None):
+    """Benchmark entry (rows for benchmarks.run + JSON side artifact)."""
+    graphs = [_bench_graph(s, edge_factor, L, eps, reps) for s in scales]
+    min_speedup = min(g["speedup_pallas_waves_vs_edges"] for g in graphs)
+    report = {
+        "benchmark": "bench_throughput",
+        "unit": "edges_per_sec",
+        "config": {
+            "scales": list(scales),
+            "edge_factor": edge_factor,
+            "L": L,
+            "eps": eps,
+            "reps": reps,
+        },
+        "graphs": graphs,
+        "acceptance": {
+            "target_speedup_pallas_waves_vs_edges": TARGET_SPEEDUP,
+            "measured_min_speedup": min_speedup,
+            "pass": bool(min_speedup >= TARGET_SPEEDUP),
+        },
+    }
+    if emit_json:
+        out = path or BENCH_PATH
+        out.write_text(json.dumps(report, indent=2) + "\n")
+
+    rows = []
+    for g in graphs:
+        tag = f"throughput_s{g['scale']}"
+        for name, t in g["engines"].items():
+            rows.append(
+                (
+                    f"{tag}_{name}",
+                    t["seconds_per_call"] * 1e6,
+                    f"{t['edges_per_sec']:.3e} edges/s",
+                )
+            )
+        rows.append(
+            (
+                f"{tag}_waves",
+                g["schedule_seconds"] * 1e6,
+                f"{g['num_waves']} waves W={g['wave_width']} "
+                f"speedup={g['speedup_pallas_waves_vs_edges']:.1f}x",
+            )
+        )
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scales", type=int, nargs="+", default=list(DEFAULT_SCALES))
+    ap.add_argument("--edge-factor", type=int, default=EDGE_FACTOR)
+    ap.add_argument("--L", type=int, default=L)
+    ap.add_argument("--eps", type=float, default=EPS)
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--no-json", action="store_true")
+    args = ap.parse_args()
+    rows = run(
+        scales=tuple(args.scales),
+        edge_factor=args.edge_factor,
+        L=args.L,
+        eps=args.eps,
+        reps=args.reps,
+        emit_json=not args.no_json,
+    )
+    print("name,us_per_call,derived")
+    for row in rows:
+        print(f"{row[0]},{row[1]:.1f},{row[2]}")
+    if not args.no_json:
+        print(f"# wrote {BENCH_PATH}")
+
+
+if __name__ == "__main__":
+    main()

@@ -14,6 +14,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (
+        bench_throughput,
         fig6_size_scaling,
         fig7_real_graphs,
         fig8_parallel_scaling,
@@ -33,6 +34,7 @@ def main() -> None:
         ("fig11", fig11_substreams),
         ("table6", table6_memory),
         ("roofline", roofline_report),
+        ("throughput", bench_throughput),
     ]
     print("name,us_per_call,derived")
     failed = 0

@@ -22,7 +22,7 @@ from repro.core.types import (
     SubstreamConfig,
     eligibility,
 )
-from repro.core.matching import mwm_scan, substream_matchings
+from repro.core.matching import mwm_scan, mwm_waves, substream_matchings
 from repro.core.blocked import mwm_blocked, lexicographic_order, permute_stream
 from repro.core.rounds import mwm_rounds, mwm_rounds_sharded
 from repro.core.merge import merge_host, merge_device, matching_weight
@@ -39,10 +39,12 @@ def mwm_pipeline(
 ):
     """End-to-end (4+eps)-approx MWM. Returns (edge_indices, weight).
 
-    part1 in {'scan', 'blocked', 'pallas', 'rounds'}.
+    part1 in {'scan', 'waves', 'blocked', 'pallas', 'rounds'}.
     """
     if part1 == "scan":
         res = mwm_scan(stream, cfg)
+    elif part1 == "waves":
+        res = mwm_waves(stream, cfg, **kw)
     elif part1 == "blocked":
         res = mwm_blocked(stream, cfg, K=K, backend="scan")
     elif part1 == "pallas":
@@ -64,6 +66,7 @@ __all__ = [
     "packed_width",
     "unpack_bits",
     "mwm_scan",
+    "mwm_waves",
     "substream_matchings",
     "mwm_blocked",
     "lexicographic_order",

@@ -15,6 +15,7 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.types import EdgeStream, MatchingResult, SubstreamConfig, eligibility
 
@@ -81,3 +82,77 @@ def substream_matchings(stream: EdgeStream, cfg: SubstreamConfig) -> jax.Array:
         step, mb0, (stream.src, stream.dst, stream.weight, stream.valid)
     )
     return added
+
+
+@partial(jax.jit, static_argnames=("cfg", "m"))
+def _wave_scan(u, v, w, ok, slots, cfg: SubstreamConfig, m: int):
+    """Scan over waves; each step is one vectorized [W, L] batch update.
+
+    ``u/v/w/ok`` are the [num_waves, W] slot arrays of
+    :func:`repro.graph.waves.slot_arrays`; ``slots`` maps each slot back
+    to its stream position (-1 = padding). Returns (assigned [m], mb).
+    """
+    thr = cfg.thresholds()
+
+    def step(mb, wave):
+        wu, wv, ww, wok = wave  # [W] each
+        te = (ww[:, None] >= thr[None, :]) & wok[:, None] & (wu != wv)[:, None]
+        mbu = mb[wu]  # [W, L]; wave edges are vertex-disjoint, so these
+        mbv = mb[wv]  # reads cannot race the scatter below
+        add = te & ~mbu & ~mbv
+        # scatter-OR (max on bool): padding slots all alias row 0 with
+        # add == False, so duplicate indices are no-ops by construction
+        mb = mb.at[wu].max(add)
+        mb = mb.at[wv].max(add)
+        idx = jnp.where(
+            add, jax.lax.broadcasted_iota(jnp.int32, add.shape, 1), -1
+        ).max(axis=1)
+        return mb, idx
+
+    mb0 = jnp.zeros((cfg.n, cfg.L), dtype=bool)
+    mb, idx = jax.lax.scan(step, mb0, (u, v, w, ok))
+    from repro.graph.waves import scatter_slot_assignments
+
+    return scatter_slot_assignments(slots, idx, m), mb
+
+
+def mwm_waves(
+    stream: EdgeStream,
+    cfg: SubstreamConfig,
+    schedule=None,
+    max_width: int | None = None,
+) -> MatchingResult:
+    """Listing 1 Part 1 over conflict-free waves (XLA parity oracle).
+
+    Decomposes the stream with :func:`repro.graph.waves.wave_schedule`
+    (or reuses a precomputed ``schedule``) and processes one
+    vertex-disjoint wave per scan step — bit-identical to
+    :func:`mwm_scan` in ``assigned`` and ``mb`` because greedy matching
+    is confluent over vertex-disjoint edges. ``#waves`` scan steps of
+    [W, L] vector work replace ``m`` scalar steps.
+
+    Host-side scheduling makes this entry point non-jittable at the top
+    level (the wave decomposition is data-dependent); the per-wave scan
+    itself is jitted.
+    """
+    from repro.graph import waves as _waves
+
+    src = np.asarray(stream.src)
+    dst = np.asarray(stream.dst)
+    valid = np.asarray(stream.valid)
+    schedule = _waves.resolve_schedule(
+        src, dst, valid, schedule=schedule, max_width=max_width
+    )
+    u, v, w, ok = _waves.slot_arrays(
+        schedule, src, dst, np.asarray(stream.weight), valid
+    )
+    assigned, mb = _wave_scan(
+        jnp.asarray(u),
+        jnp.asarray(v),
+        jnp.asarray(w),
+        jnp.asarray(ok),
+        jnp.asarray(schedule.slots),
+        cfg,
+        stream.num_edges,
+    )
+    return MatchingResult(assigned=assigned, mb=mb)

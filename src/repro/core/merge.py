@@ -23,21 +23,31 @@ def merge_host(
 
     Consumes only ``result.assigned`` — Part 2 never reads the matching
     bits, so packed-storage results merge without ever unpacking ``mb``.
+
+    The merge order "descending substream i, then stream position" is
+    realized with ONE stable argsort over the recorded edges (key
+    ``L-1-i``; stability supplies the stream-position minor key), then a
+    single greedy pass over those edges only — O(R log R + R) for R
+    recorded edges instead of the old O(L·m) scan of the whole stream
+    per substream. The greedy pass itself is the dependency chain and
+    stays a loop, exactly like the paper's sequential post-processor.
     """
     src = np.asarray(stream.src)
     dst = np.asarray(stream.dst)
     assigned = np.asarray(result.assigned)
+    recorded = np.nonzero(assigned >= 0)[0]
+    # descending i, stream order within i: stable sort on the major key
+    # alone (``recorded`` is already ascending in stream position)
+    order = recorded[np.argsort(cfg.L - 1 - assigned[recorded], kind="stable")]
     tbits = np.zeros(cfg.n, dtype=bool)
     out = []
-    # iterate i = L-1 .. 0; C[i] preserves stream order (list append order)
-    for i in range(cfg.L - 1, -1, -1):
-        for e in np.nonzero(assigned == i)[0]:
-            u, v = src[e], dst[e]
-            if not tbits[u] and not tbits[v]:
-                tbits[u] = True
-                tbits[v] = True
-                out.append(e)
-    return np.asarray(sorted(out), dtype=np.int64)
+    for e in order.tolist():
+        u, v = src[e], dst[e]
+        if not tbits[u] and not tbits[v]:
+            tbits[u] = True
+            tbits[v] = True
+            out.append(e)
+    return np.sort(np.asarray(out, dtype=np.int64))
 
 
 def merge_device(

@@ -34,10 +34,9 @@ def _vertex_min(pri_el: jax.Array, src, dst, n: int) -> jax.Array:
     return best
 
 
-@partial(jax.jit, static_argnames=("cfg", "max_rounds", "packed"))
 def mwm_rounds(
     stream: EdgeStream, cfg: SubstreamConfig, max_rounds: int = 0,
-    packed: bool = False,
+    packed: bool = False, waves=None,
 ) -> MatchingResult:
     """Parallel-rounds equivalent of Listing 1 Part 1 (single device).
 
@@ -46,7 +45,39 @@ def mwm_rounds(
     the round state itself stays bool — the conflict resolution needs
     per-substream scatters, not bitwise words. Unpacking the result is
     bit-identical to the dense output.
+
+    ``waves`` (a :class:`repro.graph.waves.WaveSchedule`) swaps the
+    propose–accept fixed point for per-wave segment updates: instead of
+    ``O(#rounds)`` passes that each run a full-[m, L] liveness mask and a
+    full-[n, L] ``.at[].min`` vertex reduction, the precomputed wave
+    offsets let each step touch exactly one conflict-free [W, L] segment
+    — no conflict resolution needed, because a wave *is* the set of
+    edges the fixed point would accept given all earlier waves. Output
+    is identical either way.
     """
+    if waves is not None:
+        if max_rounds:
+            raise ValueError(
+                "max_rounds only applies to the propose-accept fixed point; "
+                "the wave path always computes the full matching"
+            )
+        from repro.core import matching as _matching
+
+        res = _matching.mwm_waves(stream, cfg, schedule=waves)
+        if packed:
+            return MatchingResult(
+                assigned=res.assigned, mb_packed=bitpack.pack_bits(res.mb),
+                L=cfg.L,
+            )
+        return res
+    return _mwm_rounds_fixed_point(stream, cfg, max_rounds, packed)
+
+
+@partial(jax.jit, static_argnames=("cfg", "max_rounds", "packed"))
+def _mwm_rounds_fixed_point(
+    stream: EdgeStream, cfg: SubstreamConfig, max_rounds: int = 0,
+    packed: bool = False,
+) -> MatchingResult:
     thr = cfg.thresholds()
     m = stream.num_edges
     src = stream.src.astype(jnp.int32)

@@ -13,6 +13,7 @@ from repro.graph.segment import (
 from repro.graph.sampler import NeighborSampler
 from repro.graph.partition import partition_edges, partition_vertices
 from repro.graph.coarsen import coarsen_by_matching
+from repro.graph.waves import WaveSchedule, wave_schedule
 
 __all__ = [
     "kronecker_graph",
@@ -30,4 +31,6 @@ __all__ = [
     "partition_edges",
     "partition_vertices",
     "coarsen_by_matching",
+    "WaveSchedule",
+    "wave_schedule",
 ]

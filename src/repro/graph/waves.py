@@ -1,0 +1,340 @@
+"""Wave decomposition of an edge stream into conflict-free batches.
+
+The paper's edge processor (§4.4) consumes one edge per cycle because
+consecutive stream edges may share a vertex and therefore race on the
+same matching-bit row. But greedy matching w.r.t. a fixed edge order is
+*confluent* over vertex-disjoint edges: if no two edges of a batch share
+an endpoint, processing the batch in any order — or simultaneously —
+yields bit-identical matching bits and recorded lists. So the stream can
+be cut into **waves**: the greedy level assignment
+
+    wave(e) = 1 + max(last_wave[u], last_wave[v])
+
+(the longest conflict chain ending at ``e``) groups edges such that every
+wave is vertex-disjoint while conflicting edges keep their stream order
+across waves. A wave then updates the whole matching-bit block in one
+shot — the TPU analogue of the intra-pipeline parallelism FAST extracts
+from its partitioned CST pipelines: inner-loop trips drop from ``m`` to
+``#waves`` (≈ the maximum *weighted* degree of the conflict graph,
+typically orders of magnitude smaller), and each trip is full-width
+vector work instead of a scalar row update.
+
+This module is pure scheduling — numpy in, numpy out, no dependency on
+:mod:`repro.core` — so both the XLA reference (`repro.core.matching.
+mwm_waves`), the Pallas kernels (`repro.kernels.substream_match`) and
+the rounds engine (`repro.core.rounds`) can share one schedule. The
+assignment loop is host-side sequential (it *is* the dependency chain),
+mirroring the CPU-side sorter the paper already assumes for the §4.2
+lexicographic order; schedules are reusable across `L`/`eps` sweeps
+because they depend only on the edge endpoints and order.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+#: Default cap on edges per wave. Splitting an oversized wave into
+#: ``max_width`` chunks keeps the [W, width] gather tiles VMEM-bounded
+#: and bounds padding waste on skewed graphs; chunks of a vertex-disjoint
+#: set are themselves vertex-disjoint, so correctness is unaffected.
+#: Every wave is padded to ONE global width (= the largest wave after
+#: splitting), so on skewed graphs — a few huge waves, many tiny ones —
+#: lower ``max_width`` toward the typical wave size and watch
+#: ``WaveSchedule.fill``: slot memory and per-wave kernel work scale
+#: with ``num_waves * width``, not with the edge count.
+MAX_WIDTH = 512
+
+#: Wave widths are padded to a multiple of this (TPU sublane friendliness).
+WIDTH_ALIGN = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class WaveSchedule:
+    """A conflict-free wave decomposition of one edge stream.
+
+    ``wave`` int32 [m]: wave id per stream position (-1 = unscheduled,
+    i.e. a padding edge). ``order`` int32 [num_scheduled]: stream
+    positions sorted by (wave, stream position) — the wave-major
+    permutation. ``offsets`` int32 [num_waves + 1]: CSR offsets of each
+    wave inside ``order``. ``slots`` int32 [num_waves, width]: the same
+    data padded to the fixed width ``width`` with -1 in empty slots —
+    the gather map every vectorized consumer uses.
+    """
+
+    wave: np.ndarray
+    order: np.ndarray
+    offsets: np.ndarray
+    slots: np.ndarray
+    num_edges: int
+
+    @property
+    def num_waves(self) -> int:
+        return self.slots.shape[0]
+
+    @property
+    def width(self) -> int:
+        return self.slots.shape[1]
+
+    @property
+    def num_scheduled(self) -> int:
+        return int(self.order.shape[0])
+
+    @property
+    def fill(self) -> float:
+        """Fraction of slots holding a real edge (1.0 = no padding)."""
+        total = self.slots.size
+        return self.num_scheduled / total if total else 1.0
+
+    def wave_sizes(self) -> np.ndarray:
+        return np.diff(self.offsets)
+
+
+def wave_schedule(
+    src,
+    dst,
+    valid=None,
+    order=None,
+    max_width: int = MAX_WIDTH,
+    width_align: int = WIDTH_ALIGN,
+) -> WaveSchedule:
+    """Decompose a stream into vertex-disjoint waves.
+
+    ``order`` (optional int array [m]) pre-permutes the stream — e.g.
+    ``repro.core.blocked.lexicographic_order`` — so the waves respect the
+    *processing* order rather than the arrival order; the returned
+    schedule still indexes original stream positions. ``valid`` masks
+    padding edges, which are left unscheduled (``wave == -1``).
+
+    Every edge is placed one wave past the last wave touching either
+    endpoint, so any two edges sharing a vertex land in distinct waves in
+    stream order, while independent edges pack together. Waves larger
+    than ``max_width`` are split into chunks (still vertex-disjoint).
+    """
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    m = src.shape[0]
+    if dst.shape[0] != m:
+        raise ValueError(f"src/dst length mismatch: {m} vs {dst.shape[0]}")
+    if max_width < 1:
+        raise ValueError(f"max_width must be >= 1, got {max_width}")
+    valid_np = (
+        np.ones(m, dtype=bool) if valid is None else np.asarray(valid, dtype=bool)
+    )
+    positions = np.arange(m) if order is None else np.asarray(order, dtype=np.int64)
+
+    n_hint = int(max(src.max(), dst.max())) + 1 if m else 1
+    last_wave = np.full(n_hint, -1, dtype=np.int64)
+    counts: list[int] = []  # population per wave, for max_width splitting
+    # skip pointers over full waves (interval union-find with path
+    # halving): parent[k] == k while wave k is open, else the next
+    # candidate. Full waves never reopen, so amortized near-O(1) per edge
+    # — a linear "first open wave >= w" scan is quadratic on streams of
+    # mostly-independent edges, which all target the lowest waves.
+    parent: list[int] = []
+    wave = np.full(m, -1, dtype=np.int64)
+
+    def _find_open(k: int) -> int:
+        while k < len(counts) and parent[k] != k:
+            nxt = parent[k]
+            if nxt < len(counts) and parent[nxt] != nxt:
+                parent[k] = parent[nxt]
+            k = nxt
+        return k
+
+    for e in positions.tolist():
+        if not valid_np[e]:
+            continue
+        u = src[e]
+        v = dst[e]
+        w = _find_open(1 + max(last_wave[u], last_wave[v]))
+        if w == len(counts):
+            counts.append(0)
+            parent.append(w)
+        counts[w] += 1
+        if counts[w] >= max_width:
+            parent[w] = w + 1
+        wave[e] = w
+        last_wave[u] = w
+        last_wave[v] = w
+
+    num_waves = len(counts)
+    scheduled = np.nonzero(wave >= 0)[0]
+    # wave-major, stream-position-minor: stable sort on the wave key alone
+    # (``scheduled`` is already ascending in stream position)
+    order_out = scheduled[np.argsort(wave[scheduled], kind="stable")]
+    offsets = np.zeros(num_waves + 1, dtype=np.int64)
+    np.cumsum(np.asarray(counts, dtype=np.int64), out=offsets[1:])
+
+    width = int(max(counts)) if counts else 1
+    width = -(-width // width_align) * width_align
+    slots = np.full((num_waves, width), -1, dtype=np.int64)
+    if num_waves:
+        sizes = np.diff(offsets)
+        col = np.arange(len(order_out)) - np.repeat(offsets[:-1], sizes)
+        slots[wave[order_out], col] = order_out
+
+    return WaveSchedule(
+        wave=wave.astype(np.int32),
+        order=order_out.astype(np.int32),
+        offsets=offsets.astype(np.int32),
+        slots=slots.astype(np.int32),
+        num_edges=m,
+    )
+
+
+def validate_schedule(schedule: WaveSchedule, src, dst, valid=None) -> None:
+    """Vectorized safety check that ``schedule`` fits this stream.
+
+    Guards the documented reuse path (precomputed schedules amortized
+    across runs) against stale schedules — e.g. one built for a stream
+    that was permuted afterwards. A non-disjoint wave would corrupt the
+    engines silently (the kernels' scatter-add relies on disjointness),
+    so this raises instead. Checks length, that exactly the valid edges
+    are scheduled, and per-wave vertex-disjointness — all O(m log W)
+    numpy, negligible next to a kernel run. Deliberately does NOT pin
+    the conflict order to stream order: schedules built over an explicit
+    processing ``order`` are legitimate and simply realize the greedy
+    matching of that order.
+    """
+    src = np.asarray(src)
+    dst = np.asarray(dst)
+    m = schedule.num_edges
+    if src.shape[0] != m:
+        raise ValueError(
+            f"wave schedule built for {m} edges, stream has {src.shape[0]}"
+        )
+    valid_np = np.ones(m, bool) if valid is None else np.asarray(valid, bool)
+    if not np.array_equal(schedule.wave >= 0, valid_np):
+        raise ValueError(
+            "wave schedule does not cover exactly this stream's valid "
+            "edges; rebuild the schedule for the current stream"
+        )
+    slots = schedule.slots
+    if slots.size == 0:
+        return
+    ok = slots >= 0
+    safe = np.maximum(slots, 0)
+    u = np.where(ok, src[safe], 0).astype(np.int64)
+    v = np.where(ok, dst[safe], 0).astype(np.int64)
+    W = slots.shape[1]
+    # empty slots and self-loop second endpoints get per-column negative
+    # sentinels, then any duplicate in a sorted row is a real conflict
+    sentinel = -(np.arange(2 * W, dtype=np.int64)[None, :] + 2)
+    verts = np.concatenate([u, v], axis=1)
+    keep = np.concatenate([ok, ok & (u != v)], axis=1)
+    verts = np.where(keep, verts, sentinel)
+    verts.sort(axis=1)
+    if (verts[:, 1:] == verts[:, :-1]).any():
+        raise ValueError(
+            "wave schedule is not vertex-disjoint for this stream "
+            "(stale or built for a different edge order); rebuild it "
+            "with wave_schedule on the current stream"
+        )
+
+
+def resolve_schedule(
+    src,
+    dst,
+    valid,
+    schedule: WaveSchedule | None = None,
+    max_width: int | None = None,
+) -> WaveSchedule:
+    """Build a schedule for the stream, or validate a precomputed one.
+
+    The single entry every wave consumer (`mwm_waves`, the Pallas wave
+    path, rounds-with-waves) goes through, so the validation rules stay
+    in one place.
+    """
+    if schedule is None:
+        kw = {} if max_width is None else {"max_width": max_width}
+        return wave_schedule(src, dst, valid=valid, **kw)
+    validate_schedule(schedule, src, dst, valid)
+    return schedule
+
+
+def scatter_slot_assignments(slots, vals, m: int):
+    """Scatter per-slot kernel outputs back to stream positions.
+
+    ``slots`` int [..., W] maps slots to stream positions (-1 = padding),
+    ``vals`` the matching per-slot assigned indices (>= -1). Returns
+    int32 [m] with -1 for unscheduled edges. Padding slots alias position
+    0 with value -1, so the max-scatter makes them exact no-ops. Safe
+    inside jit (pure jnp).
+    """
+    import jax.numpy as jnp
+
+    flat = slots.reshape(-1)
+    vals = vals.reshape(-1)[: flat.shape[0]]
+    live = flat >= 0
+    return (
+        jnp.full((m,), -1, jnp.int32)
+        .at[jnp.where(live, flat, 0)]
+        .max(jnp.where(live, vals, -1))
+    )
+
+
+def slot_arrays(schedule: WaveSchedule, src, dst, weight, valid=None):
+    """Gather per-slot endpoint/weight arrays for vectorized consumers.
+
+    Returns numpy ``(u, v, w, ok)``, each shaped [num_waves, width].
+    Padding slots get ``u == v == 0`` and ``w == 0`` — below every
+    substream threshold and a self-loop besides, so they can never match
+    (both the XLA and Pallas wave engines rely on this encoding).
+    """
+    src = np.asarray(src)
+    dst = np.asarray(dst)
+    weight = np.asarray(weight)
+    slots = schedule.slots
+    ok = slots >= 0
+    if valid is not None:
+        ok = ok & np.where(slots >= 0, np.asarray(valid, bool)[np.maximum(slots, 0)], False)
+    safe = np.maximum(slots, 0)
+    u = np.where(ok, src[safe], 0).astype(np.int32)
+    v = np.where(ok, dst[safe], 0).astype(np.int32)
+    w = np.where(ok, weight[safe], 0).astype(np.float32)
+    return u, v, w, ok
+
+
+def check_schedule(schedule: WaveSchedule, src, dst, valid=None, order=None) -> None:
+    """Assert the wave invariants (used by tests; cheap, host-side).
+
+    * every scheduled wave is vertex-disjoint (self-loops use one slot);
+    * conflicting edges appear in processing order across waves
+      (``order`` is the explicit permutation the schedule was built
+      with, if any — stream order otherwise);
+    * ``order``/``offsets``/``slots`` describe the same decomposition.
+    """
+    src = np.asarray(src)
+    dst = np.asarray(dst)
+    wave = schedule.wave
+    if valid is not None:
+        valid = np.asarray(valid, bool)
+        assert (wave[~valid] == -1).all(), "padding edges must be unscheduled"
+        assert (wave[valid] >= 0).all(), "valid edges must be scheduled"
+    for k in range(schedule.num_waves):
+        members = schedule.order[schedule.offsets[k] : schedule.offsets[k + 1]]
+        assert (wave[members] == k).all()
+        verts = []
+        for e in members.tolist():
+            verts.append(src[e])
+            if dst[e] != src[e]:
+                verts.append(dst[e])
+        assert len(verts) == len(set(verts)), f"wave {k} not vertex-disjoint"
+        row = schedule.slots[k]
+        assert (np.sort(row[row >= 0]) == np.sort(members)).all()
+    # order preservation among conflicting edges (in processing order)
+    positions = (
+        np.nonzero(wave >= 0)[0]
+        if order is None
+        else np.asarray(order)[wave[np.asarray(order)] >= 0]
+    )
+    touch: dict[int, int] = {}
+    for e in positions.tolist():
+        for x in {int(src[e]), int(dst[e])}:
+            if x in touch:
+                assert wave[touch[x]] < wave[e], (
+                    f"edges {touch[x]} and {e} share vertex {x} but waves "
+                    f"{wave[touch[x]]} >= {wave[e]}"
+                )
+            touch[x] = e

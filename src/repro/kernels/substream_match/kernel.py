@@ -152,6 +152,136 @@ def _kernel_packed(
         mb_out_ref[...] = mb[...]
 
 
+def _kernel_waves(
+    edges_ref, w_ref, thr_ref, assigned_ref, mb_out_ref, mb, *, block_w: int, W: int
+):
+    """Wave-vectorized edge processor, unpacked int8 layout.
+
+    One ``fori_loop`` iteration consumes a whole *wave* — ``W``
+    vertex-disjoint edges laid out contiguously by the wave scheduler
+    (`repro.graph.waves`) — instead of a single edge: the row gather,
+    eligibility compare, matching update and highest-set-bit all run as
+    [W, L_pad] tile ops on the VPU. Confluence of greedy matching over
+    vertex-disjoint edges makes the result bit-identical to the 1-edge
+    pipeline. The bit-block scatter uses ``add`` (not ``or``): new bits
+    are disjoint from the old ones (``add = te & ~mbu & ~mbv``) and wave
+    rows are distinct, so addition == bitwise OR, while the padding slots
+    (u = v = 0, w = 0) and self-loops contribute exact zeros.
+
+    Physical-TPU note: the row gather/scatter is expressed as a whole-
+    block ``jnp.take`` / scatter-add, which Mosaic lowers to a dynamic
+    gather where supported; on hardware generations without it the same
+    tile can be built by a W-step DMA gather (or a one-hot matmul on the
+    MXU) without touching the wave semantics. Cost model caveat: this
+    form rematerializes the [n_pad, width] block once per wave, so
+    per-wave traffic is O(n·width + W·width), the right trade at the
+    benchmark scales (block ≤ a few hundred KiB, vectorization wins
+    26-32x measured) but wrong near the ~12 MiB capacity ceiling, where
+    #waves·n·width dominates — there the W-step row-DMA gather form (the
+    per-edge kernel's addressing, W rows at a time) is the one to use.
+    """
+    b = pl.program_id(0)
+    nblocks = pl.num_programs(0)
+
+    @pl.when(b == 0)
+    def _init():
+        mb[...] = jnp.zeros_like(mb)
+
+    L_pad = mb.shape[1]
+    thr = thr_ref[0, :]  # [L_pad] f32; padding lanes hold +inf
+    lane = jax.lax.broadcasted_iota(jnp.int32, (W, L_pad), 1)
+
+    def body(i, _):
+        # Stage 1: load one wave of W edges
+        ed = pl.load(edges_ref, (pl.ds(i * W, W), slice(None)))  # [W, 2]
+        u = ed[:, 0]
+        v = ed[:, 1]
+        w = pl.load(w_ref, (pl.ds(i * W, W), slice(None)))[:, 0]  # [W]
+        # Stage 2-3: gather both endpoint rows for the whole wave
+        mball = mb[...]
+        mbu = jnp.take(mball, u, axis=0)  # [W, L_pad] i8
+        mbv = jnp.take(mball, v, axis=0)
+        # Stage 4: eligibility for all W edges at once
+        te = (w[:, None] >= thr[None, :]) & (u != v)[:, None]
+        # Stage 5: the matching update, one [W, L_pad] tile op
+        add = te & (mbu == 0) & (mbv == 0)
+        addi = add.astype(jnp.int8)
+        # Stage 6: conflict-free scatter of the new bits
+        mb[...] = mball.at[u].add(addi).at[v].add(addi)
+        # Stage 7: highest set bit, vectorized over the wave
+        idx = jnp.max(jnp.where(add, lane, -1), axis=1)  # [W]
+        # Stage 8: emit one wave of assignments
+        pl.store(assigned_ref, (pl.ds(i * W, W), slice(None)), idx[:, None])
+        return 0
+
+    jax.lax.fori_loop(0, block_w, body, 0, unroll=False)
+
+    @pl.when(b == nblocks - 1)
+    def _flush():
+        mb_out_ref[...] = mb[...]
+
+
+def _kernel_waves_packed(
+    edges_ref, w_ref, thr_ref, assigned_ref, mb_out_ref, mb, *, block_w: int, W: int
+):
+    """Wave-vectorized edge processor, packed uint8 bit-plane layout.
+
+    Same wave semantics as :func:`_kernel_waves`; the eligibility word is
+    assembled per bit plane ([W, 8, W_pad] compare, 8-way shift-OR) and
+    the free test / matching update are single bitwise ops on the whole
+    [W, W_pad] uint8 tile. Scatter-add == scatter-OR for the same
+    disjointness reasons (new bits never overlap old bits per byte).
+    """
+    b = pl.program_id(0)
+    nblocks = pl.num_programs(0)
+
+    @pl.when(b == 0)
+    def _init():
+        mb[...] = jnp.zeros_like(mb)
+
+    W_pad = mb.shape[1]
+    thr = thr_ref[...]  # [8, W_pad] f32; +inf in padding slots
+    lane = jax.lax.broadcasted_iota(jnp.int32, (W, W_pad), 1)
+
+    def body(i, _):
+        # Stage 1: load one wave of W edges
+        ed = pl.load(edges_ref, (pl.ds(i * W, W), slice(None)))  # [W, 2]
+        u = ed[:, 0]
+        v = ed[:, 1]
+        w = pl.load(w_ref, (pl.ds(i * W, W), slice(None)))[:, 0]  # [W]
+        # Stage 2-3: gather both endpoint rows for the whole wave
+        mball = mb[...]
+        mbu = jnp.take(mball, u, axis=0)  # [W, W_pad] u8
+        mbv = jnp.take(mball, v, axis=0)
+        # Stage 4: assemble the L-bit eligibility words from bit planes
+        planes = w[:, None, None] >= thr[None, :, :]  # [W, 8, W_pad]
+        te = jnp.zeros((W, W_pad), jnp.uint8)
+        for j in range(8):
+            te |= planes[:, j, :].astype(jnp.uint8) << j
+        te = jnp.where((u != v)[:, None], te, jnp.uint8(0))
+        # Stage 5: matching update — one bitwise op per 8 substreams
+        add = te & ~mbu & ~mbv
+        # Stage 6: conflict-free scatter of the new bits
+        mb[...] = mball.at[u].add(add).at[v].add(add)
+        # Stage 7: highest set bit via shift-mask reduction over planes
+        addi = add.astype(jnp.int32)
+        idx = jnp.full((W,), -1, jnp.int32)
+        for j in range(8):
+            hit = (addi >> j) & 1
+            idx = jnp.maximum(
+                idx, jnp.max(jnp.where(hit > 0, 8 * lane + j, -1), axis=1)
+            )
+        # Stage 8: emit one wave of assignments
+        pl.store(assigned_ref, (pl.ds(i * W, W), slice(None)), idx[:, None])
+        return 0
+
+    jax.lax.fori_loop(0, block_w, body, 0, unroll=False)
+
+    @pl.when(b == nblocks - 1)
+    def _flush():
+        mb_out_ref[...] = mb[...]
+
+
 def substream_match_pallas(
     edges: jax.Array,  # int32 [m_pad, 2]
     weights: jax.Array,  # f32/bf16 [m_pad, 1]; <= 0 marks padding edges
@@ -233,6 +363,64 @@ def substream_match_pallas_packed(
             jax.ShapeDtypeStruct((n_pad, W_pad), jnp.uint8),
         ],
         scratch_shapes=[pltpu.VMEM((n_pad, W_pad), jnp.uint8)],
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary",),
+        ),
+    )(edges, weights.astype(jnp.float32), thresholds)
+    return assigned[:, 0], mb
+
+
+def substream_match_pallas_waves(
+    edges: jax.Array,  # int32 [num_waves_pad * W, 2], wave-major slot layout
+    weights: jax.Array,  # f32 [num_waves_pad * W, 1]; padding slots are 0
+    thresholds: jax.Array,  # f32 [1, L_pad] unpacked / [8, W_pad] packed
+    n_pad: int,
+    W: int,
+    block_w: int,
+    interpret: bool = True,
+    packed: bool = True,
+):
+    """Raw pallas_call wrapper for the wave-vectorized kernels.
+
+    ``edges``/``weights`` are the *slot* stream: ``num_waves_pad`` waves
+    of exactly ``W`` slots each (see ``repro.graph.waves``), flattened
+    wave-major; padding slots encode ``u = v = 0, w = 0`` so they can
+    never match. The grid walks blocks of ``block_w`` waves; ``assigned``
+    comes back per slot (callers scatter it to stream positions via the
+    schedule's slot map). Returns (assigned int32 [num_waves_pad * W],
+    mb — uint8 [n_pad, W_pad] packed / int8 [n_pad, L_pad] unpacked).
+    """
+    total = edges.shape[0]
+    block = block_w * W
+    assert total % block == 0, (total, block_w, W)
+    nblocks = total // block
+    width = thresholds.shape[1]
+    if packed:
+        assert thresholds.shape[0] == 8, thresholds.shape
+        kernel_fn, dtype = _kernel_waves_packed, jnp.uint8
+    else:
+        assert thresholds.shape[0] == 1, thresholds.shape
+        kernel_fn, dtype = _kernel_waves, jnp.int8
+
+    kernel = functools.partial(kernel_fn, block_w=block_w, W=W)
+    assigned, mb = pl.pallas_call(
+        kernel,
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((block, 2), lambda b: (b, 0)),  # wave block (pipelined)
+            pl.BlockSpec((block, 1), lambda b: (b, 0)),  # weight block
+            pl.BlockSpec(thresholds.shape, lambda b: (0, 0)),  # thresholds
+        ],
+        out_specs=[
+            pl.BlockSpec((block, 1), lambda b: (b, 0)),
+            pl.BlockSpec((n_pad, width), lambda b: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((total, 1), jnp.int32),
+            jax.ShapeDtypeStruct((n_pad, width), dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((n_pad, width), dtype)],
         interpret=interpret,
         compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary",),

@@ -114,28 +114,158 @@ def max_vertices(L: int, packed: bool = True, budget: int = VMEM_BIT_BUDGET) -> 
     return (budget // width) // 8 * 8
 
 
-@partial(jax.jit, static_argnames=("cfg", "block_e", "interpret", "packed"))
-def substream_match(
-    stream: EdgeStream,
-    cfg: SubstreamConfig,
-    block_e: int | None = None,
-    interpret: bool = True,
-    packed: bool | None = None,
-) -> MatchingResult:
-    """Run Part 1 on the given stream order via the Pallas kernel.
+def resolve_interpret(interpret: bool | None) -> bool:
+    """``None`` = auto: interpret everywhere except on a real TPU backend.
 
-    ``packed=None`` follows ``cfg.mb_layout``; ``block_e=None`` takes the
-    auto-picked value from :func:`vmem_plan`. The packed result carries
-    ``mb_packed`` (uint8 bit planes) and unpacks to the bool ``mb`` view
-    lazily; both layouts are bit-identical in ``assigned`` and ``mb``.
-
-    Raises at trace time if the bit block exceeds the VMEM budget — at that
-    size the caller must vertex-partition (core.rounds) instead.
+    Explicit True/False always wins (debugging a kernel in interpret mode
+    on TPU, or forcing compilation in tests, stays possible).
     """
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return bool(interpret)
+
+
+@dataclasses.dataclass(frozen=True)
+class WavePlan(VmemPlan):
+    """VmemPlan plus the wave-pipeline geometry.
+
+    ``wave_width`` is the fixed slot count ``W`` per wave, ``num_waves``
+    the schedule's wave count, ``block_w`` how many waves one grid
+    program consumes (so ``block_e = block_w * wave_width`` slots), and
+    ``gather_bytes`` the VMEM the per-wave [W, width] gather/compute
+    tiles add on top of the resident bit block — accounted against
+    ``VMEM_PER_CORE`` by :func:`wave_plan`.
+    """
+
+    wave_width: int
+    num_waves: int
+    block_w: int
+    gather_bytes: int
+
+
+def wave_plan(
+    n: int,
+    L: int,
+    schedule,
+    packed: bool = True,
+    block_w: int | None = None,
+) -> WavePlan:
+    """Plan VMEM for the wave-vectorized kernel over ``schedule``.
+
+    On top of the bit block (see :func:`vmem_plan`) the wave kernel keeps
+    per-wave tiles resident while a wave is in flight: the two gathered
+    endpoint-row tiles, the eligibility/add tiles (~4 tiles of
+    ``W * width`` bytes between them, counting the wider bool
+    intermediates), and the [W]-sized edge/weight/assigned vectors. The
+    auto ``block_w`` targets ~2048 slots per grid program (same latency
+    envelope as the per-edge path's 8192/4 cap) and never exceeds the
+    schedule's wave count, so short schedules stay one program.
+    """
+    W = int(schedule.width)
+    num_waves = int(schedule.num_waves)
+    base = vmem_plan(n, L, packed=packed, block_e=1)
+    gather_bytes = 6 * W * base.width + 16 * W
+    if block_w is None:
+        block_w = max(1, min(2048 // W, 256))
+        block_w = min(block_w, max(num_waves, 1))
+    # blame the wave tiles only when they are the culprit: a bit block
+    # over VMEM_BIT_BUDGET is the caller's (vertex-partitioning) problem
+    # and is reported by substream_match's budget check instead
+    if gather_bytes > VMEM_PER_CORE - min(base.nbytes, VMEM_BIT_BUDGET):
+        raise ValueError(
+            f"wave tiles ({gather_bytes} B at W={W}) + bit block "
+            f"({base.nbytes} B) exceed VMEM; re-schedule with a smaller "
+            f"max_width (repro.graph.waves.wave_schedule)"
+        )
+    return WavePlan(
+        n_pad=base.n_pad,
+        width=base.width,
+        words=base.words,
+        nbytes=base.nbytes,
+        block_e=block_w * W,
+        packed=packed,
+        wave_width=W,
+        num_waves=num_waves,
+        block_w=block_w,
+        gather_bytes=gather_bytes,
+    )
+
+
+def _resolve_packed(cfg: SubstreamConfig, packed: bool | None) -> bool:
     if packed is None:
         if cfg.mb_layout not in ("packed", "unpacked"):
             raise ValueError(f"unknown mb_layout {cfg.mb_layout!r}")
         packed = cfg.mb_layout != "unpacked"
+    return packed
+
+
+def _thresholds_padded(cfg: SubstreamConfig, width: int, packed: bool) -> jax.Array:
+    """Kernel-shaped threshold array: [8, width] bit planes (packed,
+    thr[j, k] = substream 8k+j) or [1, width] lanes (unpacked); +inf pads."""
+    thr = cfg.thresholds()
+    if packed:
+        nbits = width * 8
+        thr_flat = jnp.full((nbits,), jnp.inf, jnp.float32).at[: cfg.L].set(thr)
+        return thr_flat.reshape(width, 8).T
+    return jnp.full((1, width), jnp.inf, jnp.float32).at[0, : cfg.L].set(thr)
+
+
+def substream_match(
+    stream: EdgeStream,
+    cfg: SubstreamConfig,
+    block_e: int | None = None,
+    interpret: bool | None = None,
+    packed: bool | None = None,
+    schedule: str = "edges",
+    waves=None,
+    max_width: int | None = None,
+) -> MatchingResult:
+    """Run Part 1 on the given stream order via the Pallas kernel.
+
+    ``schedule`` picks the pipeline:
+
+    * ``"edges"`` — the paper-faithful 1-edge-per-iteration processor;
+    * ``"waves"`` — the wave-vectorized processor: the stream is first
+      decomposed into vertex-disjoint waves (``repro.graph.waves``) on
+      the host, then each wave updates the bit block as one [W, width]
+      tile op. Bit-identical to ``"edges"`` (greedy matching is
+      confluent over vertex-disjoint edges) with ``#waves`` instead of
+      ``m`` inner-loop trips. Pass a precomputed ``waves`` schedule to
+      amortize the decomposition across runs; ``max_width`` caps the
+      wave width when building one here.
+
+    ``packed=None`` follows ``cfg.mb_layout``; ``block_e=None`` takes the
+    auto-picked value from :func:`vmem_plan` (edges schedule only).
+    ``interpret=None`` = auto: interpret everywhere except on a real TPU
+    backend (:func:`resolve_interpret`). The packed result carries
+    ``mb_packed`` (uint8 bit planes) and unpacks to the bool ``mb`` view
+    lazily; both layouts are bit-identical in ``assigned`` and ``mb``.
+
+    Raises if the bit block exceeds the VMEM budget — at that size the
+    caller must vertex-partition (core.rounds) instead.
+    """
+    interpret = resolve_interpret(interpret)
+    packed = _resolve_packed(cfg, packed)
+    if schedule == "edges":
+        return _substream_match_edges(
+            stream, cfg, block_e=block_e, interpret=interpret, packed=packed
+        )
+    if schedule != "waves":
+        raise ValueError(f"unknown schedule {schedule!r}")
+    return _substream_match_waves(
+        stream, cfg, interpret=interpret, packed=packed,
+        waves=waves, max_width=max_width,
+    )
+
+
+@partial(jax.jit, static_argnames=("cfg", "block_e", "interpret", "packed"))
+def _substream_match_edges(
+    stream: EdgeStream,
+    cfg: SubstreamConfig,
+    block_e: int | None,
+    interpret: bool,
+    packed: bool,
+) -> MatchingResult:
     plan = vmem_plan(
         cfg.n, cfg.L, packed=packed, block_e=block_e, m=stream.num_edges
     )
@@ -155,15 +285,11 @@ def substream_match(
     if pad:
         edges = jnp.concatenate([edges, jnp.zeros((pad, 2), jnp.int32)])
         w = jnp.concatenate([w, jnp.zeros((pad,), jnp.float32)])
-    thr = cfg.thresholds()
+    thr_pad = _thresholds_padded(cfg, plan.width, packed)
 
     if packed:
-        # bit-plane thresholds: thr_bits[j, k] = threshold of substream 8k+j
-        nbits = plan.width * 8
-        thr_flat = jnp.full((nbits,), jnp.inf, jnp.float32).at[: cfg.L].set(thr)
-        thr_bits = thr_flat.reshape(plan.width, 8).T
         assigned, mb = _kernel.substream_match_pallas_packed(
-            edges, w[:, None], thr_bits, plan.n_pad,
+            edges, w[:, None], thr_pad, plan.n_pad,
             block_e=block_e, interpret=interpret,
         )
         return MatchingResult(
@@ -172,10 +298,89 @@ def substream_match(
             L=cfg.L,
         )
 
-    thr_pad = jnp.full((1, plan.width), jnp.inf, jnp.float32).at[0, : cfg.L].set(thr)
     assigned, mb = _kernel.substream_match_pallas(
         edges, w[:, None], thr_pad, plan.n_pad, block_e=block_e, interpret=interpret
     )
     return MatchingResult(
         assigned=assigned[:m], mb=mb[: cfg.n, : cfg.L].astype(bool)
+    )
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "cfg", "W", "block_w", "n_pad", "width", "words", "interpret", "packed", "m"
+    ),
+)
+def _waves_device(
+    u, v, w, slots, cfg, W, block_w, n_pad, width, words, interpret, packed, m
+) -> MatchingResult:
+    """Jitted device half of the wave path: pad waves to the grid, run the
+    kernel, scatter per-slot assignments back to stream positions."""
+    nw = u.shape[0]
+    nw_pad = _round_up(max(nw, 1), block_w)
+    pad = nw_pad - nw
+    uf = u.reshape(-1)
+    vf = v.reshape(-1)
+    wf = w.reshape(-1)
+    if pad:  # empty waves: u = v = 0, w = 0 slots that can never match
+        z = jnp.zeros((pad * W,), jnp.int32)
+        uf = jnp.concatenate([uf, z])
+        vf = jnp.concatenate([vf, z])
+        wf = jnp.concatenate([wf, jnp.zeros((pad * W,), jnp.float32)])
+    edges = jnp.stack([uf, vf], axis=1)
+    thr_pad = _thresholds_padded(cfg, width, packed)
+    assigned_slots, mb = _kernel.substream_match_pallas_waves(
+        edges, wf[:, None], thr_pad, n_pad,
+        W=W, block_w=block_w, interpret=interpret, packed=packed,
+    )
+    from repro.graph.waves import scatter_slot_assignments
+
+    assigned = scatter_slot_assignments(slots, assigned_slots, m)
+    if packed:
+        return MatchingResult(
+            assigned=assigned, mb_packed=mb[: cfg.n, :words], L=cfg.L
+        )
+    return MatchingResult(assigned=assigned, mb=mb[: cfg.n, : cfg.L].astype(bool))
+
+
+def _substream_match_waves(
+    stream: EdgeStream,
+    cfg: SubstreamConfig,
+    interpret: bool,
+    packed: bool,
+    waves=None,
+    max_width: int | None = None,
+) -> MatchingResult:
+    from repro.graph import waves as _waves
+
+    src = np.asarray(stream.src)
+    dst = np.asarray(stream.dst)
+    valid = np.asarray(stream.valid)
+    waves = _waves.resolve_schedule(
+        src, dst, valid, schedule=waves, max_width=max_width
+    )
+    plan = wave_plan(cfg.n, cfg.L, waves, packed=packed)
+    if plan.nbytes > VMEM_BIT_BUDGET:
+        raise ValueError(
+            f"matching-bit block {plan.nbytes/2**20:.1f} MiB > VMEM budget; "
+            f"use repro.core.rounds with vertex partitioning"
+        )
+    u, v, w, _ok = _waves.slot_arrays(
+        waves, src, dst, np.asarray(stream.weight), valid
+    )
+    return _waves_device(
+        jnp.asarray(u),
+        jnp.asarray(v),
+        jnp.asarray(w),
+        jnp.asarray(waves.slots),
+        cfg,
+        plan.wave_width,
+        plan.block_w,
+        plan.n_pad,
+        plan.width,
+        plan.words,
+        interpret,
+        packed,
+        stream.num_edges,
     )
