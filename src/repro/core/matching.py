@@ -86,10 +86,12 @@ def substream_matchings(stream: EdgeStream, cfg: SubstreamConfig) -> jax.Array:
 
 @partial(jax.jit, static_argnames=("cfg", "m"))
 def _wave_scan(u, v, w, ok, slots, cfg: SubstreamConfig, m: int):
-    """Scan over waves; each step is one vectorized [W, L] batch update.
+    """Scan over segments; each step is one vectorized [SEG, L] update.
 
-    ``u/v/w/ok`` are the [num_waves, W] slot arrays of
-    :func:`repro.graph.waves.slot_arrays`; ``slots`` maps each slot back
+    ``u/v/w/ok`` are the [num_segments, SEG] fill-packed slot arrays of
+    :func:`repro.graph.waves.slot_arrays` — each row is a segment of one
+    wave, so it is vertex-disjoint and the per-step work is proportional
+    to ``SEG``, not to the largest wave. ``slots`` maps each slot back
     to its stream position (-1 = padding). Returns (assigned [m], mb).
     """
     thr = cfg.thresholds()
@@ -126,10 +128,11 @@ def mwm_waves(
 
     Decomposes the stream with :func:`repro.graph.waves.wave_schedule`
     (or reuses a precomputed ``schedule``) and processes one
-    vertex-disjoint wave per scan step — bit-identical to
-    :func:`mwm_scan` in ``assigned`` and ``mb`` because greedy matching
-    is confluent over vertex-disjoint edges. ``#waves`` scan steps of
-    [W, L] vector work replace ``m`` scalar steps.
+    vertex-disjoint *segment* (a fill-packed chunk of one wave) per scan
+    step — bit-identical to :func:`mwm_scan` in ``assigned`` and ``mb``
+    because greedy matching is confluent over vertex-disjoint edges.
+    ``#segments`` (≈ m / SEG on well-packed streams) scan steps of
+    [SEG, L] vector work replace ``m`` scalar steps.
 
     Host-side scheduling makes this entry point non-jittable at the top
     level (the wave decomposition is data-dependent); the per-wave scan

@@ -47,13 +47,13 @@ def mwm_rounds(
     bit-identical to the dense output.
 
     ``waves`` (a :class:`repro.graph.waves.WaveSchedule`) swaps the
-    propose–accept fixed point for per-wave segment updates: instead of
-    ``O(#rounds)`` passes that each run a full-[m, L] liveness mask and a
-    full-[n, L] ``.at[].min`` vertex reduction, the precomputed wave
-    offsets let each step touch exactly one conflict-free [W, L] segment
-    — no conflict resolution needed, because a wave *is* the set of
-    edges the fixed point would accept given all earlier waves. Output
-    is identical either way.
+    propose–accept fixed point for per-segment updates: instead of
+    ``O(#rounds)`` passes that each run a full-[m, L] liveness mask and
+    a full-[n, L] ``.at[].min`` vertex reduction, the fill-packed slot
+    layout lets each step touch exactly one conflict-free [SEG, L]
+    segment — no conflict resolution needed, because a wave *is* the set
+    of edges the fixed point would accept given all earlier waves.
+    Output is identical either way.
     """
     if waves is not None:
         if max_rounds:

@@ -1,4 +1,4 @@
-"""Wave decomposition of an edge stream into conflict-free batches.
+"""Fill-packed wave decomposition of an edge stream into conflict-free batches.
 
 The paper's edge processor (§4.4) consumes one edge per cycle because
 consecutive stream edges may share a vertex and therefore race on the
@@ -6,75 +6,101 @@ same matching-bit row. But greedy matching w.r.t. a fixed edge order is
 *confluent* over vertex-disjoint edges: if no two edges of a batch share
 an endpoint, processing the batch in any order — or simultaneously —
 yields bit-identical matching bits and recorded lists. So the stream can
-be cut into **waves**: the greedy level assignment
+be cut into **waves** such that every wave is vertex-disjoint while
+conflicting edges keep their stream order across waves.
 
-    wave(e) = 1 + max(last_wave[u], last_wave[v])
+Scheduling (the tentpole of this module) is earliest-fit packing:
+every edge goes into the earliest wave that is
 
-(the longest conflict chain ending at ``e``) groups edges such that every
-wave is vertex-disjoint while conflicting edges keep their stream order
-across waves. A wave then updates the whole matching-bit block in one
-shot — the TPU analogue of the intra-pipeline parallelism FAST extracts
-from its partitioned CST pipelines: inner-loop trips drop from ``m`` to
-``#waves`` (≈ the maximum *weighted* degree of the conflict graph,
-typically orders of magnitude smaller), and each trip is full-width
-vector work instead of a scalar row update.
+* at or past its **conflict depth** — one past the wave of every earlier
+  edge sharing an endpoint, tracked with per-vertex next-free-wave
+  pointers, and
+* not **full** — when ``max_width`` caps wave occupancy, full waves are
+  skipped via an interval-union skip list, so scheduling stays near-O(m).
+
+With no occupancy cap (the default) earliest-fit collapses to the pure
+conflict-depth assignment, which is *provably minimal*: the wave count
+equals the longest conflict chain (≥ the maximum vertex multiplicity —
+every edge at the hub vertex needs its own wave), so no valid
+vertex-disjoint decomposition can use fewer waves. The depth pass is
+fully vectorized as numpy batch passes over ready edges (an indegree
+peel of the 2-predecessor conflict DAG), replacing the former per-edge
+Python loop; the capped path keeps the sequential earliest-fit packer.
+
+Layout (where the "fill-packed" in the title lives): waves are *not*
+padded to one global maximum width. They are packed back-to-back into
+fixed-size **segments** of ``SEG`` slots (a wave of size s occupies
+``ceil(s / SEG)`` segments; only its last segment carries padding), so
+``slots`` is ``[num_segments, SEG]`` and the fill — the fraction of
+slots holding a real edge — stays high regardless of wave-size skew.
+Each segment is a *subset* of one wave and therefore vertex-disjoint
+itself: every consumer that processed "one slots-row at a time"
+(the XLA wave scan, the Pallas segment kernel, rounds-with-waves) keeps
+its row-major contract unchanged, with per-row traffic proportional to
+``SEG`` instead of the largest wave.
 
 This module is pure scheduling — numpy in, numpy out, no dependency on
-:mod:`repro.core` — so both the XLA reference (`repro.core.matching.
+:mod:`repro.core` — so the XLA reference (`repro.core.matching.
 mwm_waves`), the Pallas kernels (`repro.kernels.substream_match`) and
-the rounds engine (`repro.core.rounds`) can share one schedule. The
-assignment loop is host-side sequential (it *is* the dependency chain),
-mirroring the CPU-side sorter the paper already assumes for the §4.2
-lexicographic order; schedules are reusable across `L`/`eps` sweeps
-because they depend only on the edge endpoints and order.
+the rounds engine (`repro.core.rounds`) share one schedule. Schedules
+are reusable across `L`/`eps` sweeps because they depend only on the
+edge endpoints and order.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import numpy as np
 
-#: Default cap on edges per wave. Splitting an oversized wave into
-#: ``max_width`` chunks keeps the [W, width] gather tiles VMEM-bounded
-#: and bounds padding waste on skewed graphs; chunks of a vertex-disjoint
-#: set are themselves vertex-disjoint, so correctness is unaffected.
-#: Every wave is padded to ONE global width (= the largest wave after
-#: splitting), so on skewed graphs — a few huge waves, many tiny ones —
-#: lower ``max_width`` toward the typical wave size and watch
-#: ``WaveSchedule.fill``: slot memory and per-wave kernel work scale
-#: with ``num_waves * width``, not with the edge count.
-MAX_WIDTH = 512
+#: Slots per segment — the row width of ``WaveSchedule.slots`` and the
+#: trip unit of every vectorized consumer. Waves are padded only up to
+#: the next multiple of ``SEG`` (not to a global max), so per-wave
+#: padding is < SEG slots. 8 matches the TPU sublane granularity the
+#: old ``WIDTH_ALIGN`` targeted.
+SEG = 8
 
-#: Wave widths are padded to a multiple of this (TPU sublane friendliness).
-WIDTH_ALIGN = 8
-
+#: Back-compat alias (schedule widths are multiples of this).
+WIDTH_ALIGN = SEG
 
 @dataclasses.dataclass(frozen=True)
 class WaveSchedule:
-    """A conflict-free wave decomposition of one edge stream.
+    """A conflict-free, fill-packed wave decomposition of one edge stream.
 
     ``wave`` int32 [m]: wave id per stream position (-1 = unscheduled,
     i.e. a padding edge). ``order`` int32 [num_scheduled]: stream
     positions sorted by (wave, stream position) — the wave-major
     permutation. ``offsets`` int32 [num_waves + 1]: CSR offsets of each
-    wave inside ``order``. ``slots`` int32 [num_waves, width]: the same
-    data padded to the fixed width ``width`` with -1 in empty slots —
-    the gather map every vectorized consumer uses.
+    wave inside ``order``. ``slots`` int32 [num_segments, SEG]: the
+    packed slot layout — wave k occupies segment rows
+    ``seg_offsets[k] : seg_offsets[k + 1]`` back-to-back, -1 in the
+    (< SEG) padding slots at its tail. Every row is vertex-disjoint (a
+    subset of one wave), which is the only invariant row-major consumers
+    need. ``schedule_seconds`` / ``pack_seconds`` record the host cost
+    of the assignment and layout phases.
     """
 
     wave: np.ndarray
     order: np.ndarray
     offsets: np.ndarray
     slots: np.ndarray
+    seg_offsets: np.ndarray
     num_edges: int
+    schedule_seconds: float = 0.0
+    pack_seconds: float = 0.0
 
     @property
     def num_waves(self) -> int:
-        return self.slots.shape[0]
+        return int(self.offsets.shape[0]) - 1
+
+    @property
+    def num_segments(self) -> int:
+        return int(self.slots.shape[0])
 
     @property
     def width(self) -> int:
-        return self.slots.shape[1]
+        """Slots per segment row (= ``SEG``; kept as the legacy name)."""
+        return int(self.slots.shape[1])
 
     @property
     def num_scheduled(self) -> int:
@@ -89,16 +115,129 @@ class WaveSchedule:
     def wave_sizes(self) -> np.ndarray:
         return np.diff(self.offsets)
 
+    @property
+    def max_wave_size(self) -> int:
+        sizes = self.wave_sizes()
+        return int(sizes.max()) if sizes.size else 0
+
+
+def _conflict_links(su: np.ndarray, sv: np.ndarray):
+    """Successor links of the conflict DAG over ranks 0..k-1.
+
+    Edge r (endpoints ``su[r]``, ``sv[r]``) conflicts with the previous
+    and next edge touching either endpoint. Returns (succ int32 [k, 2],
+    pred_count int32 [k]): ``succ[r, s]`` is the rank of the next edge
+    at r's endpoint s (-1 = none), ``pred_count[r]`` how many earlier
+    edges r directly waits on (0, 1, or 2). Self-loops contribute one
+    endpoint entry, so an edge never depends on itself.
+    """
+    k = su.shape[0]
+    loop = su == sv
+    ranks = np.arange(k, dtype=np.int64)
+    vert = np.concatenate([su, sv[~loop]])
+    rank = np.concatenate([ranks, ranks[~loop]])
+    side = np.concatenate(
+        [np.zeros(k, np.int8), np.ones(int((~loop).sum()), np.int8)]
+    )
+    o = np.lexsort((rank, vert))
+    vo, ro, so = vert[o], rank[o], side[o]
+    same = np.empty(len(o), bool)
+    if len(o):
+        same[0] = False
+        same[1:] = vo[1:] == vo[:-1]
+    i = np.nonzero(same)[0]
+    succ = np.full((k, 2), -1, np.int64)
+    succ[ro[i - 1], so[i - 1]] = ro[i]
+    pred_count = np.zeros(k, np.int64)
+    np.add.at(pred_count, ro[i], 1)
+    return succ, pred_count
+
+
+def _assign_depth_batched(su: np.ndarray, sv: np.ndarray) -> np.ndarray:
+    """Conflict depth per rank via numpy batch passes over ready edges.
+
+    Pass t resolves exactly the edges of depth t (an edge is ready once
+    every earlier edge sharing an endpoint has a depth, and its depth is
+    one past its deepest predecessor — so the ready frontier of pass t
+    IS depth level t). Each edge enters the frontier once and notifies
+    at most two successors, so total element work is O(m) spread over
+    ``depth_max`` vectorized passes — no per-edge Python loop.
+    """
+    k = su.shape[0]
+    depth = np.zeros(k, np.int64)
+    if k == 0:
+        return depth
+    succ, waiting = _conflict_links(su, sv)
+    frontier = np.nonzero(waiting == 0)[0]
+    d = -1
+    while frontier.size:
+        d += 1
+        depth[frontier] = d
+        nxt = succ[frontier].reshape(-1)
+        nxt = nxt[nxt >= 0]
+        if not nxt.size:
+            break
+        np.subtract.at(waiting, nxt, 1)
+        frontier = nxt[waiting[nxt] == 0]
+        if frontier.size > 1:
+            # a rank occurs twice in ``nxt`` when both of its
+            # predecessors resolved this pass
+            frontier = np.unique(frontier)
+    return depth
+
+
+def _assign_earliest_fit(
+    su: np.ndarray, sv: np.ndarray, max_width: int
+) -> np.ndarray:
+    """Sequential earliest-fit packer with per-wave occupancy ``max_width``.
+
+    Every edge lands in the earliest wave at or past its conflict depth
+    (per-vertex next-free-wave pointers in ``avail``) that still has a
+    free slot. Full waves never reopen, so they are skipped with an
+    interval union (path-halving) — amortized near-O(1) per edge, where
+    a linear "first open wave" rescan would be quadratic on streams of
+    mostly-independent edges that all target the lowest waves.
+    """
+    k = su.shape[0]
+    n_hint = int(max(su.max(), sv.max())) + 1 if k else 1
+    avail = np.zeros(n_hint, dtype=np.int64)  # next free wave per vertex
+    counts: list[int] = []  # occupancy per wave
+    parent: list[int] = []  # skip pointers over full waves
+    wave = np.empty(k, dtype=np.int64)
+
+    def _find_open(w: int) -> int:
+        while w < len(counts) and parent[w] != w:
+            nxt = parent[w]
+            if nxt < len(counts) and parent[nxt] != nxt:
+                parent[w] = parent[nxt]
+            w = nxt
+        return w
+
+    for r in range(k):
+        u = su[r]
+        v = sv[r]
+        w = _find_open(int(max(avail[u], avail[v])))
+        if w == len(counts):
+            counts.append(0)
+            parent.append(w)
+        counts[w] += 1
+        if counts[w] >= max_width:
+            parent[w] = w + 1
+        wave[r] = w
+        avail[u] = w + 1
+        avail[v] = w + 1
+    return wave
+
 
 def wave_schedule(
     src,
     dst,
     valid=None,
     order=None,
-    max_width: int = MAX_WIDTH,
-    width_align: int = WIDTH_ALIGN,
+    max_width: int | None = None,
+    seg: int = SEG,
 ) -> WaveSchedule:
-    """Decompose a stream into vertex-disjoint waves.
+    """Decompose a stream into vertex-disjoint, fill-packed waves.
 
     ``order`` (optional int array [m]) pre-permutes the stream — e.g.
     ``repro.core.blocked.lexicographic_order`` — so the waves respect the
@@ -106,80 +245,71 @@ def wave_schedule(
     schedule still indexes original stream positions. ``valid`` masks
     padding edges, which are left unscheduled (``wave == -1``).
 
-    Every edge is placed one wave past the last wave touching either
-    endpoint, so any two edges sharing a vertex land in distinct waves in
-    stream order, while independent edges pack together. Waves larger
-    than ``max_width`` are split into chunks (still vertex-disjoint).
+    ``max_width`` (default None = uncapped) bounds per-wave occupancy
+    via the sequential earliest-fit packer; uncapped scheduling is the
+    vectorized conflict-depth assignment, which is wave-count minimal.
+    Either way every edge is placed at or past its conflict depth, so
+    any two edges sharing a vertex land in distinct waves in processing
+    order while independent edges pack together. ``seg`` is the slot
+    width of the packed layout (see :data:`SEG`).
     """
     src = np.asarray(src, dtype=np.int64)
     dst = np.asarray(dst, dtype=np.int64)
     m = src.shape[0]
     if dst.shape[0] != m:
         raise ValueError(f"src/dst length mismatch: {m} vs {dst.shape[0]}")
-    if max_width < 1:
+    if max_width is not None and max_width < 1:
         raise ValueError(f"max_width must be >= 1, got {max_width}")
+    if seg < 1:
+        raise ValueError(f"seg must be >= 1, got {seg}")
     valid_np = (
         np.ones(m, dtype=bool) if valid is None else np.asarray(valid, dtype=bool)
     )
     positions = np.arange(m) if order is None else np.asarray(order, dtype=np.int64)
+    positions = positions[valid_np[positions]]
 
-    n_hint = int(max(src.max(), dst.max())) + 1 if m else 1
-    last_wave = np.full(n_hint, -1, dtype=np.int64)
-    counts: list[int] = []  # population per wave, for max_width splitting
-    # skip pointers over full waves (interval union-find with path
-    # halving): parent[k] == k while wave k is open, else the next
-    # candidate. Full waves never reopen, so amortized near-O(1) per edge
-    # — a linear "first open wave >= w" scan is quadratic on streams of
-    # mostly-independent edges, which all target the lowest waves.
-    parent: list[int] = []
+    t0 = time.perf_counter()
+    su = src[positions]
+    sv = dst[positions]
+    if max_width is None:
+        wave_of_rank = _assign_depth_batched(su, sv)
+    else:
+        wave_of_rank = _assign_earliest_fit(su, sv, max_width)
     wave = np.full(m, -1, dtype=np.int64)
+    wave[positions] = wave_of_rank
+    t1 = time.perf_counter()
 
-    def _find_open(k: int) -> int:
-        while k < len(counts) and parent[k] != k:
-            nxt = parent[k]
-            if nxt < len(counts) and parent[nxt] != nxt:
-                parent[k] = parent[nxt]
-            k = nxt
-        return k
-
-    for e in positions.tolist():
-        if not valid_np[e]:
-            continue
-        u = src[e]
-        v = dst[e]
-        w = _find_open(1 + max(last_wave[u], last_wave[v]))
-        if w == len(counts):
-            counts.append(0)
-            parent.append(w)
-        counts[w] += 1
-        if counts[w] >= max_width:
-            parent[w] = w + 1
-        wave[e] = w
-        last_wave[u] = w
-        last_wave[v] = w
-
-    num_waves = len(counts)
+    num_waves = int(wave_of_rank.max()) + 1 if wave_of_rank.size else 0
     scheduled = np.nonzero(wave >= 0)[0]
     # wave-major, stream-position-minor: stable sort on the wave key alone
     # (``scheduled`` is already ascending in stream position)
     order_out = scheduled[np.argsort(wave[scheduled], kind="stable")]
+    counts = np.bincount(wave[scheduled], minlength=max(num_waves, 1))[:num_waves]
     offsets = np.zeros(num_waves + 1, dtype=np.int64)
-    np.cumsum(np.asarray(counts, dtype=np.int64), out=offsets[1:])
+    np.cumsum(counts, out=offsets[1:])
 
-    width = int(max(counts)) if counts else 1
-    width = -(-width // width_align) * width_align
-    slots = np.full((num_waves, width), -1, dtype=np.int64)
-    if num_waves:
-        sizes = np.diff(offsets)
-        col = np.arange(len(order_out)) - np.repeat(offsets[:-1], sizes)
-        slots[wave[order_out], col] = order_out
+    # fill-packed layout: wave k occupies ceil(counts[k] / seg) segment
+    # rows back-to-back; only its last row carries (< seg) padding
+    seg_counts = -(-counts // seg)
+    seg_offsets = np.zeros(num_waves + 1, dtype=np.int64)
+    np.cumsum(seg_counts, out=seg_offsets[1:])
+    num_segments = int(seg_offsets[-1])
+    slots = np.full((num_segments, seg), -1, dtype=np.int64)
+    if num_segments:
+        within = np.arange(len(order_out)) - np.repeat(offsets[:-1], counts)
+        row = np.repeat(seg_offsets[:-1], counts) + within // seg
+        slots[row, within % seg] = order_out
+    t2 = time.perf_counter()
 
     return WaveSchedule(
         wave=wave.astype(np.int32),
         order=order_out.astype(np.int32),
         offsets=offsets.astype(np.int32),
         slots=slots.astype(np.int32),
+        seg_offsets=seg_offsets.astype(np.int32),
         num_edges=m,
+        schedule_seconds=t1 - t0,
+        pack_seconds=t2 - t1,
     )
 
 
@@ -189,13 +319,13 @@ def validate_schedule(schedule: WaveSchedule, src, dst, valid=None) -> None:
     Guards the documented reuse path (precomputed schedules amortized
     across runs) against stale schedules — e.g. one built for a stream
     that was permuted afterwards. A non-disjoint wave would corrupt the
-    engines silently (the kernels' scatter-add relies on disjointness),
-    so this raises instead. Checks length, that exactly the valid edges
-    are scheduled, and per-wave vertex-disjointness — all O(m log W)
-    numpy, negligible next to a kernel run. Deliberately does NOT pin
-    the conflict order to stream order: schedules built over an explicit
-    processing ``order`` are legitimate and simply realize the greedy
-    matching of that order.
+    engines silently (the kernels' row-addressed scatter relies on
+    disjointness), so this raises instead. Checks length, that exactly
+    the valid edges are scheduled, and per-wave vertex-disjointness —
+    all O(m log m) numpy, negligible next to a kernel run. Deliberately
+    does NOT pin the conflict order to stream order: schedules built
+    over an explicit processing ``order`` are legitimate and simply
+    realize the greedy matching of that order.
     """
     src = np.asarray(src)
     dst = np.asarray(dst)
@@ -210,22 +340,33 @@ def validate_schedule(schedule: WaveSchedule, src, dst, valid=None) -> None:
             "wave schedule does not cover exactly this stream's valid "
             "edges; rebuild the schedule for the current stream"
         )
-    slots = schedule.slots
-    if slots.size == 0:
+    order = schedule.order
+    # the engines gather from ``slots``, so check it agrees with the
+    # wave-major permutation (its non-padding entries ARE ``order``) —
+    # a schedule whose derived fields drifted from its slot layout would
+    # otherwise pass the wave checks below and still corrupt the gather
+    flat = schedule.slots.reshape(-1)
+    if not np.array_equal(flat[flat >= 0], order):
+        raise ValueError(
+            "wave schedule slot layout disagrees with its wave order "
+            "(corrupted or hand-built schedule); rebuild it with "
+            "wave_schedule on the current stream"
+        )
+    if order.size == 0:
         return
-    ok = slots >= 0
-    safe = np.maximum(slots, 0)
-    u = np.where(ok, src[safe], 0).astype(np.int64)
-    v = np.where(ok, dst[safe], 0).astype(np.int64)
-    W = slots.shape[1]
-    # empty slots and self-loop second endpoints get per-column negative
-    # sentinels, then any duplicate in a sorted row is a real conflict
-    sentinel = -(np.arange(2 * W, dtype=np.int64)[None, :] + 2)
-    verts = np.concatenate([u, v], axis=1)
-    keep = np.concatenate([ok, ok & (u != v)], axis=1)
-    verts = np.where(keep, verts, sentinel)
-    verts.sort(axis=1)
-    if (verts[:, 1:] == verts[:, :-1]).any():
+    # per-wave disjointness: sort (wave, vertex) pairs over both
+    # endpoints (self-loops contribute one), adjacent duplicates are
+    # conflicts. Checked over the full wave, not just segment rows —
+    # strictly stronger than what the row-major consumers need.
+    u = src[order].astype(np.int64)
+    v = dst[order].astype(np.int64)
+    w_ids = schedule.wave[order].astype(np.int64)
+    keep = u != v
+    verts = np.concatenate([u, v[keep]])
+    waves = np.concatenate([w_ids, w_ids[keep]])
+    o = np.lexsort((verts, waves))
+    dup = (waves[o][1:] == waves[o][:-1]) & (verts[o][1:] == verts[o][:-1])
+    if dup.any():
         raise ValueError(
             "wave schedule is not vertex-disjoint for this stream "
             "(stale or built for a different edge order); rebuild it "
@@ -247,8 +388,7 @@ def resolve_schedule(
     in one place.
     """
     if schedule is None:
-        kw = {} if max_width is None else {"max_width": max_width}
-        return wave_schedule(src, dst, valid=valid, **kw)
+        return wave_schedule(src, dst, valid=valid, max_width=max_width)
     validate_schedule(schedule, src, dst, valid)
     return schedule
 
@@ -277,10 +417,12 @@ def scatter_slot_assignments(slots, vals, m: int):
 def slot_arrays(schedule: WaveSchedule, src, dst, weight, valid=None):
     """Gather per-slot endpoint/weight arrays for vectorized consumers.
 
-    Returns numpy ``(u, v, w, ok)``, each shaped [num_waves, width].
+    Returns numpy ``(u, v, w, ok)``, each shaped [num_segments, SEG].
     Padding slots get ``u == v == 0`` and ``w == 0`` — below every
     substream threshold and a self-loop besides, so they can never match
-    (both the XLA and Pallas wave engines rely on this encoding).
+    (the XLA wave engine relies on this encoding; the Pallas path remaps
+    ``~ok`` slots to a sacrificial bit-block row before its in-place
+    row scatter, see ops._waves_device).
     """
     src = np.asarray(src)
     dst = np.asarray(dst)
@@ -296,6 +438,34 @@ def slot_arrays(schedule: WaveSchedule, src, dst, weight, valid=None):
     return u, v, w, ok
 
 
+def greedy_depths(src, dst, valid=None, order=None) -> np.ndarray:
+    """Reference conflict depths (0-based), sequential oracle.
+
+    ``depth[e] = 1 + max(depth of previous edge at u, at v)`` walked in
+    processing order — the per-edge loop the vectorized scheduler
+    replaced, kept as the test oracle for the "every edge is placed at
+    or past its conflict depth" invariant. Returns int64 [m], -1 for
+    unscheduled (invalid) edges.
+    """
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    m = src.shape[0]
+    valid_np = np.ones(m, bool) if valid is None else np.asarray(valid, bool)
+    positions = np.arange(m) if order is None else np.asarray(order, dtype=np.int64)
+    n_hint = int(max(src.max(), dst.max())) + 1 if m else 1
+    last = np.full(n_hint, -1, np.int64)
+    depth = np.full(m, -1, np.int64)
+    for e in positions.tolist():
+        if not valid_np[e]:
+            continue
+        u, v = src[e], dst[e]
+        d = 1 + max(last[u], last[v])
+        depth[e] = d
+        last[u] = d
+        last[v] = d
+    return depth
+
+
 def check_schedule(schedule: WaveSchedule, src, dst, valid=None, order=None) -> None:
     """Assert the wave invariants (used by tests; cheap, host-side).
 
@@ -303,7 +473,11 @@ def check_schedule(schedule: WaveSchedule, src, dst, valid=None, order=None) -> 
     * conflicting edges appear in processing order across waves
       (``order`` is the explicit permutation the schedule was built
       with, if any — stream order otherwise);
-    * ``order``/``offsets``/``slots`` describe the same decomposition.
+    * every edge sits at or past its conflict depth (equal when the
+      schedule is uncapped);
+    * ``order``/``offsets``/``seg_offsets``/``slots`` describe the same
+      fill-packed decomposition: wave k's members fill its segment rows
+      back-to-back with padding only at the tail of its last row.
     """
     src = np.asarray(src)
     dst = np.asarray(dst)
@@ -312,6 +486,7 @@ def check_schedule(schedule: WaveSchedule, src, dst, valid=None, order=None) -> 
         valid = np.asarray(valid, bool)
         assert (wave[~valid] == -1).all(), "padding edges must be unscheduled"
         assert (wave[valid] >= 0).all(), "valid edges must be scheduled"
+    seg = schedule.width
     for k in range(schedule.num_waves):
         members = schedule.order[schedule.offsets[k] : schedule.offsets[k + 1]]
         assert (wave[members] == k).all()
@@ -321,11 +496,19 @@ def check_schedule(schedule: WaveSchedule, src, dst, valid=None, order=None) -> 
             if dst[e] != src[e]:
                 verts.append(dst[e])
         assert len(verts) == len(set(verts)), f"wave {k} not vertex-disjoint"
-        row = schedule.slots[k]
-        assert (np.sort(row[row >= 0]) == np.sort(members)).all()
+        rows = schedule.slots[schedule.seg_offsets[k] : schedule.seg_offsets[k + 1]]
+        flat = rows.reshape(-1)
+        assert rows.shape[0] == -(-len(members) // seg), f"wave {k} segment count"
+        assert (flat[: len(members)] == members).all(), f"wave {k} slot layout"
+        assert (flat[len(members) :] == -1).all(), f"wave {k} slot padding"
+    # depth floor: earliest-fit never places an edge before its conflict
+    # depth (uncapped scheduling places it exactly there)
+    depths = greedy_depths(src, dst, valid=valid, order=order)
+    scheduled = wave >= 0
+    assert (wave[scheduled] >= depths[scheduled]).all(), "edge above its depth"
     # order preservation among conflicting edges (in processing order)
     positions = (
-        np.nonzero(wave >= 0)[0]
+        np.nonzero(scheduled)[0]
         if order is None
         else np.asarray(order)[wave[np.asarray(order)] >= 0]
     )

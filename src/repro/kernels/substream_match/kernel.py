@@ -153,32 +153,37 @@ def _kernel_packed(
 
 
 def _kernel_waves(
-    edges_ref, w_ref, thr_ref, assigned_ref, mb_out_ref, mb, *, block_w: int, W: int
+    edges_ref, w_ref, thr_ref, assigned_ref, mb_out_ref, mb,
+    *, block_s: int, seg: int, n_out: int,
 ):
-    """Wave-vectorized edge processor, unpacked int8 layout.
+    """Segment-vectorized edge processor, unpacked int8 layout.
 
-    One ``fori_loop`` iteration consumes a whole *wave* — ``W``
-    vertex-disjoint edges laid out contiguously by the wave scheduler
-    (`repro.graph.waves`) — instead of a single edge: the row gather,
-    eligibility compare, matching update and highest-set-bit all run as
-    [W, L_pad] tile ops on the VPU. Confluence of greedy matching over
-    vertex-disjoint edges makes the result bit-identical to the 1-edge
-    pipeline. The bit-block scatter uses ``add`` (not ``or``): new bits
-    are disjoint from the old ones (``add = te & ~mbu & ~mbv``) and wave
-    rows are distinct, so addition == bitwise OR, while the padding slots
-    (u = v = 0, w = 0) and self-loops contribute exact zeros.
+    One ``fori_loop`` iteration consumes one *segment* — ``seg``
+    vertex-disjoint slots of the fill-packed schedule
+    (`repro.graph.waves`): waves are packed back-to-back into fixed
+    [seg]-slot rows, so the kernel never pays for a global max-wave
+    width and its per-trip traffic is O(seg·width), proportional to the
+    slots it actually processes, not to the graph. Row addressing is the
+    gather/scatter form: both endpoint rows are gathered by row index,
+    the eligibility/matching update runs as [seg, L_pad] tile ops, and
+    the new bits are written back row-by-row in place — the former
+    whole-block ``mball.at[u].add`` rematerialized (read + rewrote) the
+    entire [n_rows, width] block once per wave, O(n·width) traffic that
+    dominated near the VMEM capacity ceiling.
 
-    Physical-TPU note: the row gather/scatter is expressed as a whole-
-    block ``jnp.take`` / scatter-add, which Mosaic lowers to a dynamic
-    gather where supported; on hardware generations without it the same
-    tile can be built by a W-step DMA gather (or a one-hot matmul on the
-    MXU) without touching the wave semantics. Cost model caveat: this
-    form rematerializes the [n_pad, width] block once per wave, so
-    per-wave traffic is O(n·width + W·width), the right trade at the
-    benchmark scales (block ≤ a few hundred KiB, vectorization wins
-    26-32x measured) but wrong near the ~12 MiB capacity ceiling, where
-    #waves·n·width dominates — there the W-step row-DMA gather form (the
-    per-edge kernel's addressing, W rows at a time) is the one to use.
+    Why in-place row writes are safe: real slots in a segment are
+    vertex-disjoint (u-rows, v-rows all distinct), self-loops contribute
+    ``add == 0`` and write their freshly-gathered row back unchanged,
+    and padding slots are remapped by the caller to a *sacrificial* row
+    at index ``n_out`` (outside the flushed block) so they can never
+    race a real vertex-0 write — every duplicate row index in a scatter
+    carries an identical value.
+
+    Physical-TPU note: the row gather/scatter is expressed as
+    array-indexed ref reads/writes, which interpret mode executes
+    directly; on hardware the same addressing is a seg-step DMA row
+    gather (the per-edge kernel's addressing, seg rows at a time) or a
+    one-hot MXU matmul — the wave semantics are unchanged.
     """
     b = pl.program_id(0)
     nblocks = pl.num_programs(0)
@@ -189,48 +194,49 @@ def _kernel_waves(
 
     L_pad = mb.shape[1]
     thr = thr_ref[0, :]  # [L_pad] f32; padding lanes hold +inf
-    lane = jax.lax.broadcasted_iota(jnp.int32, (W, L_pad), 1)
+    lane = jax.lax.broadcasted_iota(jnp.int32, (seg, L_pad), 1)
 
     def body(i, _):
-        # Stage 1: load one wave of W edges
-        ed = pl.load(edges_ref, (pl.ds(i * W, W), slice(None)))  # [W, 2]
+        # Stage 1: load one segment of seg slots
+        ed = pl.load(edges_ref, (pl.ds(i * seg, seg), slice(None)))  # [seg, 2]
         u = ed[:, 0]
         v = ed[:, 1]
-        w = pl.load(w_ref, (pl.ds(i * W, W), slice(None)))[:, 0]  # [W]
-        # Stage 2-3: gather both endpoint rows for the whole wave
-        mball = mb[...]
-        mbu = jnp.take(mball, u, axis=0)  # [W, L_pad] i8
-        mbv = jnp.take(mball, v, axis=0)
-        # Stage 4: eligibility for all W edges at once
+        w = pl.load(w_ref, (pl.ds(i * seg, seg), slice(None)))[:, 0]  # [seg]
+        # Stage 2-3: row-addressed gather of both endpoint rows
+        mbu = mb[u, :]  # [seg, L_pad] i8
+        mbv = mb[v, :]
+        # Stage 4: eligibility for the whole segment at once
         te = (w[:, None] >= thr[None, :]) & (u != v)[:, None]
-        # Stage 5: the matching update, one [W, L_pad] tile op
+        # Stage 5: the matching update, one [seg, L_pad] tile op
         add = te & (mbu == 0) & (mbv == 0)
         addi = add.astype(jnp.int8)
-        # Stage 6: conflict-free scatter of the new bits
-        mb[...] = mball.at[u].add(addi).at[v].add(addi)
-        # Stage 7: highest set bit, vectorized over the wave
-        idx = jnp.max(jnp.where(add, lane, -1), axis=1)  # [W]
-        # Stage 8: emit one wave of assignments
-        pl.store(assigned_ref, (pl.ds(i * W, W), slice(None)), idx[:, None])
+        # Stage 6: in-place row scatter of the new bits
+        mb[u, :] = mbu | addi
+        mb[v, :] = mbv | addi
+        # Stage 7: highest set bit, vectorized over the segment
+        idx = jnp.max(jnp.where(add, lane, -1), axis=1)  # [seg]
+        # Stage 8: emit one segment of assignments
+        pl.store(assigned_ref, (pl.ds(i * seg, seg), slice(None)), idx[:, None])
         return 0
 
-    jax.lax.fori_loop(0, block_w, body, 0, unroll=False)
+    jax.lax.fori_loop(0, block_s, body, 0, unroll=False)
 
     @pl.when(b == nblocks - 1)
     def _flush():
-        mb_out_ref[...] = mb[...]
+        mb_out_ref[...] = mb[0:n_out, :]
 
 
 def _kernel_waves_packed(
-    edges_ref, w_ref, thr_ref, assigned_ref, mb_out_ref, mb, *, block_w: int, W: int
+    edges_ref, w_ref, thr_ref, assigned_ref, mb_out_ref, mb,
+    *, block_s: int, seg: int, n_out: int,
 ):
-    """Wave-vectorized edge processor, packed uint8 bit-plane layout.
+    """Segment-vectorized edge processor, packed uint8 bit-plane layout.
 
-    Same wave semantics as :func:`_kernel_waves`; the eligibility word is
-    assembled per bit plane ([W, 8, W_pad] compare, 8-way shift-OR) and
-    the free test / matching update are single bitwise ops on the whole
-    [W, W_pad] uint8 tile. Scatter-add == scatter-OR for the same
-    disjointness reasons (new bits never overlap old bits per byte).
+    Same segment semantics as :func:`_kernel_waves`; the eligibility
+    word is assembled per bit plane ([seg, 8, W_pad] compare, 8-way
+    shift-OR) and the free test / matching update are single bitwise ops
+    on the whole [seg, W_pad] uint8 tile before the in-place row
+    scatter.
     """
     b = pl.program_id(0)
     nblocks = pl.num_programs(0)
@@ -241,45 +247,44 @@ def _kernel_waves_packed(
 
     W_pad = mb.shape[1]
     thr = thr_ref[...]  # [8, W_pad] f32; +inf in padding slots
-    lane = jax.lax.broadcasted_iota(jnp.int32, (W, W_pad), 1)
+    shift = jax.lax.broadcasted_iota(jnp.uint8, (1, 8, 1), 1)
+    # substream index of bit j in word k: 8k + j, as one [1, W_pad, 8] map
+    bit_of = (
+        8 * jax.lax.broadcasted_iota(jnp.int32, (1, W_pad, 8), 1)
+        + jax.lax.broadcasted_iota(jnp.int32, (1, W_pad, 8), 2)
+    )
 
     def body(i, _):
-        # Stage 1: load one wave of W edges
-        ed = pl.load(edges_ref, (pl.ds(i * W, W), slice(None)))  # [W, 2]
+        # Stage 1: load one segment of seg slots
+        ed = pl.load(edges_ref, (pl.ds(i * seg, seg), slice(None)))  # [seg, 2]
         u = ed[:, 0]
         v = ed[:, 1]
-        w = pl.load(w_ref, (pl.ds(i * W, W), slice(None)))[:, 0]  # [W]
-        # Stage 2-3: gather both endpoint rows for the whole wave
-        mball = mb[...]
-        mbu = jnp.take(mball, u, axis=0)  # [W, W_pad] u8
-        mbv = jnp.take(mball, v, axis=0)
-        # Stage 4: assemble the L-bit eligibility words from bit planes
-        planes = w[:, None, None] >= thr[None, :, :]  # [W, 8, W_pad]
-        te = jnp.zeros((W, W_pad), jnp.uint8)
-        for j in range(8):
-            te |= planes[:, j, :].astype(jnp.uint8) << j
+        w = pl.load(w_ref, (pl.ds(i * seg, seg), slice(None)))[:, 0]  # [seg]
+        # Stage 2-3: row-addressed gather of both endpoint rows
+        mbu = mb[u, :]  # [seg, W_pad] u8
+        mbv = mb[v, :]
+        # Stage 4: assemble the L-bit eligibility words from bit planes —
+        # plane bits are disjoint, so the shift-OR is a plain sum
+        planes = w[:, None, None] >= thr[None, :, :]  # [seg, 8, W_pad]
+        te = (planes.astype(jnp.uint8) << shift).sum(axis=1).astype(jnp.uint8)
         te = jnp.where((u != v)[:, None], te, jnp.uint8(0))
         # Stage 5: matching update — one bitwise op per 8 substreams
         add = te & ~mbu & ~mbv
-        # Stage 6: conflict-free scatter of the new bits
-        mb[...] = mball.at[u].add(add).at[v].add(add)
-        # Stage 7: highest set bit via shift-mask reduction over planes
-        addi = add.astype(jnp.int32)
-        idx = jnp.full((W,), -1, jnp.int32)
-        for j in range(8):
-            hit = (addi >> j) & 1
-            idx = jnp.maximum(
-                idx, jnp.max(jnp.where(hit > 0, 8 * lane + j, -1), axis=1)
-            )
-        # Stage 8: emit one wave of assignments
-        pl.store(assigned_ref, (pl.ds(i * W, W), slice(None)), idx[:, None])
+        # Stage 6: in-place row scatter of the new bits
+        mb[u, :] = mbu | add
+        mb[v, :] = mbv | add
+        # Stage 7: highest set bit over the unpacked [seg, W_pad, 8] view
+        hit = (add[:, :, None] >> shift.reshape(1, 1, 8)) & 1
+        idx = jnp.max(jnp.where(hit > 0, bit_of, -1), axis=(1, 2))  # [seg]
+        # Stage 8: emit one segment of assignments
+        pl.store(assigned_ref, (pl.ds(i * seg, seg), slice(None)), idx[:, None])
         return 0
 
-    jax.lax.fori_loop(0, block_w, body, 0, unroll=False)
+    jax.lax.fori_loop(0, block_s, body, 0, unroll=False)
 
     @pl.when(b == nblocks - 1)
     def _flush():
-        mb_out_ref[...] = mb[...]
+        mb_out_ref[...] = mb[0:n_out, :]
 
 
 def substream_match_pallas(
@@ -371,31 +376,44 @@ def substream_match_pallas_packed(
     return assigned[:, 0], mb
 
 
+#: Extra scratch rows past ``n_pad``: row ``n_pad`` is the sacrificial
+#: row every padding slot is remapped to (so its no-op writes can never
+#: duplicate a real vertex row inside one scatter); the band is 8 rows
+#: to keep the scratch row count a multiple of 8.
+SACRIFICIAL_ROWS = 8
+
+
 def substream_match_pallas_waves(
-    edges: jax.Array,  # int32 [num_waves_pad * W, 2], wave-major slot layout
-    weights: jax.Array,  # f32 [num_waves_pad * W, 1]; padding slots are 0
+    edges: jax.Array,  # int32 [num_segments_pad * seg, 2], packed slot layout
+    weights: jax.Array,  # f32 [num_segments_pad * seg, 1]; padding slots are 0
     thresholds: jax.Array,  # f32 [1, L_pad] unpacked / [8, W_pad] packed
     n_pad: int,
-    W: int,
-    block_w: int,
+    seg: int,
+    block_s: int,
     interpret: bool = True,
     packed: bool = True,
 ):
-    """Raw pallas_call wrapper for the wave-vectorized kernels.
+    """Raw pallas_call wrapper for the segment-vectorized kernels.
 
-    ``edges``/``weights`` are the *slot* stream: ``num_waves_pad`` waves
-    of exactly ``W`` slots each (see ``repro.graph.waves``), flattened
-    wave-major; padding slots encode ``u = v = 0, w = 0`` so they can
-    never match. The grid walks blocks of ``block_w`` waves; ``assigned``
-    comes back per slot (callers scatter it to stream positions via the
-    schedule's slot map). Returns (assigned int32 [num_waves_pad * W],
-    mb — uint8 [n_pad, W_pad] packed / int8 [n_pad, L_pad] unpacked).
+    ``edges``/``weights`` are the fill-packed *slot* stream:
+    ``num_segments_pad`` segments of exactly ``seg`` slots each (see
+    ``repro.graph.waves`` — waves packed back-to-back, each padded only
+    to the next ``seg`` multiple), flattened row-major. Padding slots
+    MUST encode ``u = v = n_pad`` (the sacrificial bit-block row) with
+    ``w = 0``: the in-place row scatter requires duplicate row indices
+    to carry identical values, which a padding alias of a real vertex
+    row would break. The grid walks blocks of ``block_s`` segments;
+    ``assigned`` comes back per slot (callers scatter it to stream
+    positions via the schedule's slot map). Returns (assigned int32
+    [num_segments_pad * seg], mb — uint8 [n_pad, W_pad] packed /
+    int8 [n_pad, L_pad] unpacked; the sacrificial band is not flushed).
     """
     total = edges.shape[0]
-    block = block_w * W
-    assert total % block == 0, (total, block_w, W)
+    block = block_s * seg
+    assert total % block == 0, (total, block_s, seg)
     nblocks = total // block
     width = thresholds.shape[1]
+    n_rows = n_pad + SACRIFICIAL_ROWS
     if packed:
         assert thresholds.shape[0] == 8, thresholds.shape
         kernel_fn, dtype = _kernel_waves_packed, jnp.uint8
@@ -403,12 +421,12 @@ def substream_match_pallas_waves(
         assert thresholds.shape[0] == 1, thresholds.shape
         kernel_fn, dtype = _kernel_waves, jnp.int8
 
-    kernel = functools.partial(kernel_fn, block_w=block_w, W=W)
+    kernel = functools.partial(kernel_fn, block_s=block_s, seg=seg, n_out=n_pad)
     assigned, mb = pl.pallas_call(
         kernel,
         grid=(nblocks,),
         in_specs=[
-            pl.BlockSpec((block, 2), lambda b: (b, 0)),  # wave block (pipelined)
+            pl.BlockSpec((block, 2), lambda b: (b, 0)),  # segment block (pipelined)
             pl.BlockSpec((block, 1), lambda b: (b, 0)),  # weight block
             pl.BlockSpec(thresholds.shape, lambda b: (0, 0)),  # thresholds
         ],
@@ -420,7 +438,7 @@ def substream_match_pallas_waves(
             jax.ShapeDtypeStruct((total, 1), jnp.int32),
             jax.ShapeDtypeStruct((n_pad, width), dtype),
         ],
-        scratch_shapes=[pltpu.VMEM((n_pad, width), dtype)],
+        scratch_shapes=[pltpu.VMEM((n_rows, width), dtype)],
         interpret=interpret,
         compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary",),

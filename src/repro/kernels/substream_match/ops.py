@@ -127,20 +127,25 @@ def resolve_interpret(interpret: bool | None) -> bool:
 
 @dataclasses.dataclass(frozen=True)
 class WavePlan(VmemPlan):
-    """VmemPlan plus the wave-pipeline geometry.
+    """VmemPlan plus the segment-pipeline geometry.
 
-    ``wave_width`` is the fixed slot count ``W`` per wave, ``num_waves``
-    the schedule's wave count, ``block_w`` how many waves one grid
-    program consumes (so ``block_e = block_w * wave_width`` slots), and
-    ``gather_bytes`` the VMEM the per-wave [W, width] gather/compute
-    tiles add on top of the resident bit block — accounted against
-    ``VMEM_PER_CORE`` by :func:`wave_plan`.
+    ``seg`` is the fixed slot count per segment tile (the schedule's
+    fill-packed row width), ``num_waves``/``num_segments`` the
+    schedule's true wave count and packed row count, ``block_s`` how
+    many segments one grid program consumes (so ``block_e = block_s *
+    seg`` slots), ``gather_bytes`` the VMEM the per-trip [seg, width]
+    gather/compute tiles add on top of the resident bit block —
+    accounted against ``VMEM_PER_CORE`` by :func:`wave_plan` — and
+    ``fill`` the schedule's slot fill (fraction of slots holding a real
+    edge).
     """
 
-    wave_width: int
+    seg: int
     num_waves: int
-    block_w: int
+    num_segments: int
+    block_s: int
     gather_bytes: int
+    fill: float
 
 
 def wave_plan(
@@ -148,46 +153,70 @@ def wave_plan(
     L: int,
     schedule,
     packed: bool = True,
-    block_w: int | None = None,
+    block_s: int | None = None,
 ) -> WavePlan:
-    """Plan VMEM for the wave-vectorized kernel over ``schedule``.
+    """Plan VMEM for the segment-vectorized kernel over ``schedule``.
 
-    On top of the bit block (see :func:`vmem_plan`) the wave kernel keeps
-    per-wave tiles resident while a wave is in flight: the two gathered
-    endpoint-row tiles, the eligibility/add tiles (~4 tiles of
-    ``W * width`` bytes between them, counting the wider bool
-    intermediates), and the [W]-sized edge/weight/assigned vectors. The
-    auto ``block_w`` targets ~2048 slots per grid program (same latency
-    envelope as the per-edge path's 8192/4 cap) and never exceeds the
-    schedule's wave count, so short schedules stay one program.
+    On top of the bit block (see :func:`vmem_plan`; plus one 8-row
+    sacrificial band for padding slots) the kernel keeps per-segment
+    tiles resident while a trip is in flight: the two gathered
+    endpoint-row tiles, the eligibility/add tiles, the [seg, 8, width]
+    bool bit-plane compare, and the [seg]-sized edge/weight/assigned
+    vectors — ~12 tiles of ``seg * width`` bytes between them. The tile
+    size is the *segment*, so the footprint no longer scales with the
+    largest wave: gather bytes are per trip, proportional to ``seg``.
+    The auto ``block_s`` targets ~512 slots per grid program (the
+    measured interpret-mode sweet spot; a short latency envelope on
+    hardware), never exceeds the schedule's segment count, and shrinks
+    until the double-buffered slot-stream blocks fit the VMEM the bit
+    block and gather tiles leave free. Errors name the knob that must
+    change.
     """
-    W = int(schedule.width)
+    seg = int(schedule.width)
     num_waves = int(schedule.num_waves)
+    num_segments = int(schedule.num_segments)
     base = vmem_plan(n, L, packed=packed, block_e=1)
-    gather_bytes = 6 * W * base.width + 16 * W
-    if block_w is None:
-        block_w = max(1, min(2048 // W, 256))
-        block_w = min(block_w, max(num_waves, 1))
-    # blame the wave tiles only when they are the culprit: a bit block
+    gather_bytes = 12 * seg * base.width + 24 * seg
+    free = VMEM_PER_CORE - min(base.nbytes, VMEM_BIT_BUDGET)
+    # blame the segment tiles only when they are the culprit: a bit block
     # over VMEM_BIT_BUDGET is the caller's (vertex-partitioning) problem
     # and is reported by substream_match's budget check instead
-    if gather_bytes > VMEM_PER_CORE - min(base.nbytes, VMEM_BIT_BUDGET):
+    if gather_bytes > free:
         raise ValueError(
-            f"wave tiles ({gather_bytes} B at W={W}) + bit block "
-            f"({base.nbytes} B) exceed VMEM; re-schedule with a smaller "
-            f"max_width (repro.graph.waves.wave_schedule)"
+            f"segment tiles ({gather_bytes} B at seg={seg}) + bit block "
+            f"({base.nbytes} B) exceed VMEM; rebuild the schedule with a "
+            f"smaller seg (repro.graph.waves.wave_schedule(seg=...))"
+        )
+    stream_free = free - gather_bytes
+    if block_s is None:
+        # ~512 slots per grid program: measured sweet spot of the
+        # interpret-mode pipeline (smaller per-program input copies) and
+        # a short enough latency envelope on hardware
+        block_s = max(1, min(512 // seg, 256))
+        block_s = min(block_s, max(num_segments, 1))
+        while block_s > 1 and block_s * seg * _EDGE_BYTES > stream_free:
+            block_s //= 2
+    if block_s * seg * _EDGE_BYTES > stream_free:
+        raise ValueError(
+            f"slot-stream blocks ({block_s * seg * _EDGE_BYTES} B at "
+            f"block_s={block_s}, seg={seg}) exceed the VMEM left by the "
+            f"bit block and segment tiles ({stream_free} B); lower "
+            f"block_s (ops.wave_plan) or seg "
+            f"(repro.graph.waves.wave_schedule(seg=...))"
         )
     return WavePlan(
         n_pad=base.n_pad,
         width=base.width,
         words=base.words,
         nbytes=base.nbytes,
-        block_e=block_w * W,
+        block_e=block_s * seg,
         packed=packed,
-        wave_width=W,
+        seg=seg,
         num_waves=num_waves,
-        block_w=block_w,
+        num_segments=num_segments,
+        block_s=block_s,
         gather_bytes=gather_bytes,
+        fill=float(schedule.fill),
     )
 
 
@@ -309,39 +338,26 @@ def _substream_match_edges(
 @partial(
     jax.jit,
     static_argnames=(
-        "cfg", "W", "block_w", "n_pad", "width", "words", "interpret", "packed", "m"
+        "cfg", "seg", "block_s", "n_pad", "width", "words", "interpret", "packed"
     ),
 )
 def _waves_device(
-    u, v, w, slots, cfg, W, block_w, n_pad, width, words, interpret, packed, m
-) -> MatchingResult:
-    """Jitted device half of the wave path: pad waves to the grid, run the
-    kernel, scatter per-slot assignments back to stream positions."""
-    nw = u.shape[0]
-    nw_pad = _round_up(max(nw, 1), block_w)
-    pad = nw_pad - nw
-    uf = u.reshape(-1)
-    vf = v.reshape(-1)
-    wf = w.reshape(-1)
-    if pad:  # empty waves: u = v = 0, w = 0 slots that can never match
-        z = jnp.zeros((pad * W,), jnp.int32)
-        uf = jnp.concatenate([uf, z])
-        vf = jnp.concatenate([vf, z])
-        wf = jnp.concatenate([wf, jnp.zeros((pad * W,), jnp.float32)])
-    edges = jnp.stack([uf, vf], axis=1)
+    edges, w, cfg, seg, block_s, n_pad, width, words, interpret, packed
+):
+    """Jitted device half of the wave path: run the segment kernel over
+    the host-prepped slot stream. ``edges``/``w`` are already
+    grid-padded with padding slots remapped to the sacrificial row (see
+    :func:`_substream_match_waves`, which also scatters the per-slot
+    assignments back to stream positions — a plain numpy indexed store,
+    since every stream position occupies exactly one slot)."""
     thr_pad = _thresholds_padded(cfg, width, packed)
     assigned_slots, mb = _kernel.substream_match_pallas_waves(
-        edges, wf[:, None], thr_pad, n_pad,
-        W=W, block_w=block_w, interpret=interpret, packed=packed,
+        edges, w, thr_pad, n_pad,
+        seg=seg, block_s=block_s, interpret=interpret, packed=packed,
     )
-    from repro.graph.waves import scatter_slot_assignments
-
-    assigned = scatter_slot_assignments(slots, assigned_slots, m)
     if packed:
-        return MatchingResult(
-            assigned=assigned, mb_packed=mb[: cfg.n, :words], L=cfg.L
-        )
-    return MatchingResult(assigned=assigned, mb=mb[: cfg.n, : cfg.L].astype(bool))
+        return assigned_slots, mb[: cfg.n, :words]
+    return assigned_slots, mb[: cfg.n, : cfg.L].astype(bool)
 
 
 def _substream_match_waves(
@@ -366,21 +382,44 @@ def _substream_match_waves(
             f"matching-bit block {plan.nbytes/2**20:.1f} MiB > VMEM budget; "
             f"use repro.core.rounds with vertex partitioning"
         )
-    u, v, w, _ok = _waves.slot_arrays(
+    u, v, w, ok = _waves.slot_arrays(
         waves, src, dst, np.asarray(stream.weight), valid
     )
-    return _waves_device(
-        jnp.asarray(u),
-        jnp.asarray(v),
-        jnp.asarray(w),
-        jnp.asarray(waves.slots),
+    # host-side slot prep (all vectorized numpy): remap padding slots to
+    # the sacrificial bit-block row n_pad — the in-place row scatter
+    # needs duplicate row indices to carry identical values, which a
+    # padding alias of real vertex 0 would break — and pad the segment
+    # count up to the grid block
+    ns = u.shape[0]
+    ns_pad = _round_up(max(ns, 1), plan.block_s)
+    total = ns_pad * plan.seg
+    sac = np.int32(plan.n_pad)
+    edges = np.full((total, 2), sac, np.int32)
+    wf = np.zeros((total, 1), np.float32)
+    okf = ok.reshape(-1)
+    edges[: ns * plan.seg, 0] = np.where(okf, u.reshape(-1), sac)
+    edges[: ns * plan.seg, 1] = np.where(okf, v.reshape(-1), sac)
+    wf[: ns * plan.seg, 0] = w.reshape(-1)
+    assigned_slots, mb = _waves_device(
+        jnp.asarray(edges),
+        jnp.asarray(wf),
         cfg,
-        plan.wave_width,
-        plan.block_w,
+        plan.seg,
+        plan.block_s,
         plan.n_pad,
         plan.width,
         plan.words,
         interpret,
         packed,
-        stream.num_edges,
     )
+    # slot -> stream-position scatter on the host: each stream position
+    # occupies exactly one slot, so this is a plain indexed store
+    m = stream.num_edges
+    flat = waves.slots.reshape(-1)
+    live = flat >= 0
+    assigned = np.full(m, -1, np.int32)
+    assigned[flat[live]] = np.asarray(assigned_slots)[: flat.size][live]
+    assigned = jnp.asarray(assigned)
+    if packed:
+        return MatchingResult(assigned=assigned, mb_packed=mb, L=cfg.L)
+    return MatchingResult(assigned=assigned, mb=mb)

@@ -1,0 +1,164 @@
+"""Property suite for the fill-packed earliest-fit wave scheduler.
+
+The packer's contract, on top of the generic wave invariants:
+
+* every wave — and therefore every packed segment row — is
+  vertex-disjoint;
+* conflicting edges keep their processing order across waves;
+* every edge is placed at or past its greedy conflict depth (exactly at
+  it when uncapped, which makes the uncapped wave count provably
+  minimal);
+* the fill-packed [num_segments, SEG] layout carries padding only at
+  each wave's tail segment, so the fill never depends on wave-size skew;
+* both the packed (uint8 bit-plane) and unpacked (int8) engine layouts
+  stay bit-identical to the sequential scan oracle in ``assigned`` and
+  ``mb`` — including self-loops, duplicate edges, L % 8 != 0, capped
+  (earliest-fit occupancy) schedules, and single-edge streams.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import EdgeStream, SubstreamConfig, mwm_scan, mwm_waves
+from repro.graph.waves import (
+    SEG,
+    check_schedule,
+    greedy_depths,
+    wave_schedule,
+)
+from repro.kernels.substream_match.ops import substream_match
+
+SETTINGS = dict(max_examples=15, deadline=None)
+
+
+def _stream(draw, max_n=48, max_m=150):
+    """Streams biased to the packer edge cases: self-loops and duplicate
+    edges (both kept on purpose), padding edges, L % 8 != 0."""
+    n = draw(st.integers(4, max_n))
+    m = draw(st.integers(1, max_m))
+    L = draw(st.sampled_from([1, 4, 9, 16, 33]))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    cfg = SubstreamConfig(n=n, L=L, eps=0.1)
+    src = rng.integers(0, n, m)
+    dst = rng.integers(0, n, m)
+    if m > 4 and draw(st.booleans()):  # force exact duplicate edges
+        src[m // 2] = src[0]
+        dst[m // 2] = dst[0]
+    if m > 2 and draw(st.booleans()):  # force a self-loop
+        dst[m // 3] = src[m // 3]
+    w = rng.uniform(0.5, cfg.w_max * 1.1, m).astype(np.float32)
+    pad = draw(st.sampled_from([0, 7]))
+    return EdgeStream.from_numpy(src, dst, w, n_pad=m + pad), cfg
+
+
+@given(st.data())
+@settings(**SETTINGS)
+def test_packer_invariants_uncapped(data):
+    """Uncapped packing = exact conflict depth: wave-count minimal, and
+    the packed layout groups each wave's members contiguously with
+    padding only at its tail segment."""
+    stream, _ = _stream(data.draw)
+    src = np.asarray(stream.src)
+    dst = np.asarray(stream.dst)
+    valid = np.asarray(stream.valid)
+    sch = wave_schedule(src, dst, valid=valid)
+    check_schedule(sch, src, dst, valid)
+    depths = greedy_depths(src, dst, valid=valid)
+    assert (sch.wave == depths).all(), "uncapped packing must equal depth"
+    # wave count floor: the longest conflict chain; also >= max vertex
+    # multiplicity, so no vertex-disjoint decomposition can do better
+    assert sch.num_waves == (int(depths.max()) + 1 if valid.any() else 0)
+    # fill-packed accounting: one partially-filled segment max per wave
+    sizes = sch.wave_sizes()
+    assert sch.num_segments == int((-(-sizes // SEG)).sum())
+    assert sch.slots.shape == (sch.num_segments, SEG)
+    assert sch.num_scheduled == int(valid.sum())
+    assert sch.schedule_seconds >= 0.0 and sch.pack_seconds >= 0.0
+
+
+@given(st.data())
+@settings(**SETTINGS)
+def test_packer_invariants_capped(data):
+    """Earliest-fit with occupancy caps: sizes bounded, every edge at or
+    past its depth, conflict order preserved, segments disjoint."""
+    stream, _ = _stream(data.draw)
+    src = np.asarray(stream.src)
+    dst = np.asarray(stream.dst)
+    valid = np.asarray(stream.valid)
+    cap = data.draw(st.sampled_from([1, 2, 3, 8]))
+    sch = wave_schedule(src, dst, valid=valid, max_width=cap)
+    check_schedule(sch, src, dst, valid)  # includes the depth floor
+    assert (sch.wave_sizes() <= cap).all()
+    # capping never reorders conflicts, only delays placements
+    depths = greedy_depths(src, dst, valid=valid)
+    assert (sch.wave[valid] >= depths[valid]).all()
+
+
+@given(st.data())
+@settings(max_examples=10, deadline=None)
+def test_packed_schedule_bit_identity(data):
+    """Packed-layout engine results == the sequential scan oracle, for
+    uncapped and capped schedules, packed and unpacked bit layouts."""
+    stream, cfg = _stream(data.draw, max_n=32, max_m=90)
+    src = np.asarray(stream.src)
+    dst = np.asarray(stream.dst)
+    valid = np.asarray(stream.valid)
+    want = mwm_scan(stream, cfg)
+    cap = data.draw(st.sampled_from([None, 4]))
+    sch = wave_schedule(src, dst, valid=valid, max_width=cap)
+    got_xla = mwm_waves(stream, cfg, schedule=sch)
+    got_p = substream_match(stream, cfg, schedule="waves", waves=sch, packed=True)
+    got_u = substream_match(stream, cfg, schedule="waves", waves=sch, packed=False)
+    for got in (got_xla, got_p, got_u):
+        assert (np.asarray(got.assigned) == np.asarray(want.assigned)).all()
+        assert (np.asarray(got.mb) == np.asarray(want.mb)).all()
+
+
+def test_single_edge_stream():
+    stream = EdgeStream.from_numpy([0], [1], [3.0])
+    cfg = SubstreamConfig(n=4, L=9, eps=0.1)
+    sch = wave_schedule(np.asarray(stream.src), np.asarray(stream.dst))
+    assert sch.num_waves == 1 and sch.num_segments == 1
+    assert sch.fill == 1 / SEG
+    want = mwm_scan(stream, cfg)
+    got = substream_match(stream, cfg, schedule="waves", waves=sch)
+    assert (np.asarray(got.assigned) == np.asarray(want.assigned)).all()
+    assert (np.asarray(got.mb) == np.asarray(want.mb)).all()
+
+
+def test_fill_beats_global_padding_on_skew():
+    """The motivating case: one hub wave much wider than the rest. The
+    old layout padded every wave to the hub width (fill -> 1/max);
+    fill-packing bounds the loss at < SEG slots per wave."""
+    hub = np.repeat(np.arange(1, 65), 1)  # 64 disjoint edges, one wave
+    src = np.concatenate([2 * hub, np.zeros(32, np.int64)])
+    dst = np.concatenate([2 * hub + 1, np.arange(200, 232)])
+    sch = wave_schedule(src, dst)
+    # wave 0 has 65 edges (64 disjoint + first hub edge), then 31 hub
+    # waves of one edge each; packed fill stays high regardless
+    assert sch.max_wave_size >= 64
+    assert sch.fill >= len(src) / (len(src) + SEG * sch.num_waves)
+    assert sch.fill > 0.25
+
+
+def test_packer_determinism():
+    rng = np.random.default_rng(3)
+    src = rng.integers(0, 30, 200)
+    dst = rng.integers(0, 30, 200)
+    a = wave_schedule(src, dst)
+    b = wave_schedule(src, dst)
+    for f in ("wave", "order", "offsets", "slots", "seg_offsets"):
+        assert np.array_equal(getattr(a, f), getattr(b, f)), f
+
+
+@pytest.mark.parametrize("m", [1, 7, 8, 9, 40000])
+def test_conflict_free_stream_packs_full_segments(m):
+    """All-independent edges: one wave, ceil(m / SEG) segments, and the
+    batched depth passes stay near-linear (no per-edge Python loop)."""
+    src = np.arange(0, 2 * m, 2)
+    dst = np.arange(1, 2 * m, 2)
+    sch = wave_schedule(src, dst)
+    assert sch.num_waves == 1
+    assert sch.num_segments == -(-m // SEG)
+    assert sch.fill == m / (sch.num_segments * SEG)

@@ -259,8 +259,9 @@ def test_slot_arrays_padding_encoding(rng):
     w = np.array([1.0, 2.0, 3.0, 4.0], np.float32)
     sch = wave_schedule(src, dst)
     u, v, ws, ok = slot_arrays(sch, src, dst, w)
-    assert u.shape == (sch.num_waves, sch.width)
+    assert u.shape == (sch.num_segments, sch.width)
     # padding slots can never match: self-loop at vertex 0 with weight 0
+    # (the Pallas path additionally remaps them to the sacrificial row)
     assert (u[~ok] == 0).all() and (v[~ok] == 0).all() and (ws[~ok] == 0).all()
     assert ok.sum() == 4
 
@@ -277,21 +278,27 @@ def test_wave_plan_accounting(rng):
     for packed in (True, False):
         plan = wave_plan(cfg.n, cfg.L, sch, packed=packed)
         assert isinstance(plan, WavePlan)
-        assert plan.wave_width == sch.width
+        assert plan.seg == sch.width
         assert plan.num_waves == sch.num_waves
-        assert plan.block_e == plan.block_w * plan.wave_width
-        assert plan.gather_bytes > 0
+        assert plan.num_segments == sch.num_segments
+        assert plan.block_e == plan.block_s * plan.seg
+        # gather bytes scale with the segment tile, not the largest wave
+        assert 0 < plan.gather_bytes <= 16 * sch.width * plan.width + 32 * sch.width
         assert plan.nbytes + plan.gather_bytes <= VMEM_PER_CORE
-    # oversized wave tiles must be rejected, pointing at max_width
+    # oversized segment tiles must be rejected, pointing at seg
     huge = WaveSchedule(
         wave=np.zeros(1, np.int32),
         order=np.zeros(1, np.int32),
         offsets=np.array([0, 1], np.int32),
         slots=np.zeros((1, 2**22), np.int32),
+        seg_offsets=np.array([0, 1], np.int32),
         num_edges=1,
     )
-    with pytest.raises(ValueError, match="max_width"):
+    with pytest.raises(ValueError, match="seg"):
         wave_plan(cfg.n, cfg.L, huge, packed=True)
+    # an explicit block_s that overflows the stream buffers names block_s
+    with pytest.raises(ValueError, match="block_s"):
+        wave_plan(cfg.n, cfg.L, sch, packed=True, block_s=2**24)
 
 
 @pytest.mark.parametrize("packed", [True, False], ids=["packed", "unpacked"])
