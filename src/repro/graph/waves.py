@@ -357,15 +357,20 @@ def validate_schedule(schedule: WaveSchedule, src, dst, valid=None) -> None:
     # per-wave disjointness: sort (wave, vertex) pairs over both
     # endpoints (self-loops contribute one), adjacent duplicates are
     # conflicts. Checked over the full wave, not just segment rows —
-    # strictly stronger than what the row-major consumers need.
+    # strictly stronger than what the row-major consumers need. The two
+    # keys are fused into one int64 (vertex ids fit far below 2**31 and
+    # wave ids below m, so wave * (max_vertex + 1) + vertex cannot
+    # overflow or collide) — one np.sort instead of a two-pass lexsort,
+    # which halves the dominant host cost every engine pays per call on
+    # the precomputed-schedule path.
     u = src[order].astype(np.int64)
     v = dst[order].astype(np.int64)
     w_ids = schedule.wave[order].astype(np.int64)
     keep = u != v
     verts = np.concatenate([u, v[keep]])
     waves = np.concatenate([w_ids, w_ids[keep]])
-    o = np.lexsort((verts, waves))
-    dup = (waves[o][1:] == waves[o][:-1]) & (verts[o][1:] == verts[o][:-1])
+    key = np.sort(waves * (int(verts.max()) + 1) + verts)
+    dup = key[1:] == key[:-1]
     if dup.any():
         raise ValueError(
             "wave schedule is not vertex-disjoint for this stream "
@@ -391,6 +396,122 @@ def resolve_schedule(
         return wave_schedule(src, dst, valid=valid, max_width=max_width)
     validate_schedule(schedule, src, dst, valid)
     return schedule
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockAlignedLayout:
+    """A :class:`WaveSchedule` slot layout re-padded to ``seg_block`` tiles.
+
+    The megakernel (`repro.kernels.substream_match`) consumes the slot
+    stream one *tile* — ``seg_block`` consecutive segment rows, i.e.
+    ``seg_block * SEG`` slots — per gather/compute/scatter op. A tile op
+    is only safe when every slot in the tile is vertex-disjoint, which
+    holds exactly when no tile straddles a wave boundary. This layout
+    therefore pads each wave's segment-row run up to the next
+    ``seg_block`` multiple (padding rows are all ``-1``), so
+
+    * ``slots`` is ``[num_tiles * seg_block, SEG]`` int32; rows
+      ``seg_offsets[k] : seg_offsets[k + 1]`` belong to wave ``k`` and
+      that range length is a ``seg_block`` multiple;
+    * ``seg_offsets`` int32 [num_waves + 1] is monotone, block-aligned
+      (every entry a ``seg_block`` multiple), and its last entry is the
+      total aligned segment count;
+    * every stream position scheduled by the source schedule occupies
+      exactly one slot (padding only ever *adds* ``-1`` slots).
+
+    ``fill`` is the real-edge fraction of the aligned layout — always
+    ≤ the source schedule's fill; the megakernel trades it for a
+    ~``seg_block``× cut in sequential tile trips.
+    """
+
+    slots: np.ndarray
+    seg_offsets: np.ndarray
+    seg_block: int
+    num_edges: int
+
+    @property
+    def num_tiles(self) -> int:
+        return int(self.slots.shape[0]) // self.seg_block
+
+    @property
+    def num_segments(self) -> int:
+        return int(self.slots.shape[0])
+
+    @property
+    def width(self) -> int:
+        return int(self.slots.shape[1])
+
+    @property
+    def fill(self) -> float:
+        total = self.slots.size
+        return int((self.slots >= 0).sum()) / total if total else 1.0
+
+
+def block_aligned_layout(
+    schedule: WaveSchedule, seg_block: int
+) -> BlockAlignedLayout:
+    """Re-pad ``schedule.slots`` so every wave spans whole tiles.
+
+    Pure numpy re-layout (no re-scheduling): wave ``k``'s segment rows
+    are copied back-to-back to a ``seg_block``-aligned base row and the
+    gap up to the next aligned base is left as ``-1`` padding rows. The
+    result is the megakernel's HBM slot stream: consecutive groups of
+    ``seg_block`` rows ("tiles") never straddle a wave, so each tile is
+    vertex-disjoint and one ``[seg_block * SEG, width]`` tile op per
+    trip is bit-identical to the sequential scan.
+    """
+    if seg_block < 1:
+        raise ValueError(f"seg_block must be >= 1, got {seg_block}")
+    seg = schedule.width
+    segc = np.diff(schedule.seg_offsets).astype(np.int64)
+    segc_aligned = -(-segc // seg_block) * seg_block
+    offsets = np.zeros(segc_aligned.shape[0] + 1, np.int64)
+    np.cumsum(segc_aligned, out=offsets[1:])
+    total = int(offsets[-1])
+    slots = np.full((total, seg), -1, np.int64)
+    if schedule.num_segments:
+        src_rows = np.arange(schedule.num_segments, dtype=np.int64)
+        wave_of_row = np.repeat(
+            np.arange(schedule.num_waves, dtype=np.int64), segc
+        )
+        dst_rows = offsets[wave_of_row] + (
+            src_rows - schedule.seg_offsets[wave_of_row]
+        )
+        slots[dst_rows] = schedule.slots
+    return BlockAlignedLayout(
+        slots=slots.astype(np.int32),
+        seg_offsets=offsets.astype(np.int32),
+        seg_block=seg_block,
+        num_edges=schedule.num_edges,
+    )
+
+
+def check_block_aligned(layout: BlockAlignedLayout, schedule: WaveSchedule) -> None:
+    """Assert the block-aligned invariants (host-side, used by tests).
+
+    * offsets are monotone, ``seg_block``-aligned, and end at the total;
+    * every slot of the source schedule is covered exactly once, in the
+      same wave-major order (the non-padding entries ARE ``order``);
+    * padding rows appear only at the tail of each wave's tile run, so
+      no tile straddles a wave boundary — the invariant that makes one
+      tile op per trip race-free.
+    """
+    offs = layout.seg_offsets
+    sb = layout.seg_block
+    assert offs[0] == 0 and offs[-1] == layout.num_segments
+    assert (np.diff(offs) >= 0).all(), "offsets must be monotone"
+    assert (offs % sb == 0).all(), "offsets must be seg_block-aligned"
+    flat = layout.slots.reshape(-1)
+    live = flat[flat >= 0]
+    assert np.array_equal(live, schedule.order), "slot coverage/order"
+    counts = np.bincount(live, minlength=schedule.num_edges)
+    assert counts.max(initial=0) <= 1, "a stream position occupies two slots"
+    for k in range(schedule.num_waves):
+        rows = layout.slots[offs[k] : offs[k + 1]]
+        members = schedule.order[schedule.offsets[k] : schedule.offsets[k + 1]]
+        rflat = rows.reshape(-1)
+        assert (rflat[: len(members)] == members).all(), f"wave {k} layout"
+        assert (rflat[len(members) :] == -1).all(), f"wave {k} padding"
 
 
 def scatter_slot_assignments(slots, vals, m: int):

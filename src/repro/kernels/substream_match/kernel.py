@@ -51,6 +51,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
@@ -381,6 +382,270 @@ def substream_match_pallas_packed(
 #: duplicate a real vertex row inside one scatter); the band is 8 rows
 #: to keep the scratch row count a multiple of 8.
 SACRIFICIAL_ROWS = 8
+
+
+def _prefix_te_table(width: int) -> jax.Array:
+    """[8 * width + 1, width] uint8: row c = the packed L-bit prefix mask
+    with the lowest ``c`` bits set (bit j of word k = substream 8k+j).
+
+    Substream thresholds are non-decreasing ((1+eps)^i), so the Stage-4
+    eligibility word of an edge is always a *prefix*: te = all substreams
+    whose threshold <= w. That reduces the per-edge threshold test to a
+    count (how many thresholds pass) plus this table lookup — one fused
+    [block]-wide compare/sum per grid program instead of a bit-plane
+    assembly per tile. Built from iotas so it can live inside a Pallas
+    kernel (captured array constants are rejected); a handful of one-time
+    ops per grid program.
+    """
+    c = jax.lax.broadcasted_iota(jnp.int32, (8 * width + 1, width), 0)
+    k = jax.lax.broadcasted_iota(jnp.int32, (8 * width + 1, width), 1)
+    nbits = jnp.clip(c - 8 * k, 0, 8)
+    return ((1 << nbits) - 1).astype(jnp.uint8)
+
+
+def _high_bit_table() -> jax.Array:
+    """[256] int32: highest set bit of a uint8 (floor log2), with a
+    sentinel low enough that an all-zero eligibility row still reduces
+    to < -1 after the word offsets (8k <= 8*width) are added. Uses the
+    f32-exponent trick (exact for integers < 2^24) so it builds from an
+    iota inside the kernel."""
+    i = jax.lax.broadcasted_iota(jnp.int32, (256,), 0)
+    e = (jax.lax.bitcast_convert_type(i.astype(jnp.float32), jnp.int32) >> 23) - 127
+    return jnp.where(i > 0, e, -1024)
+
+
+def _kernel_waves_mega(
+    seg_offsets_ref, uv_ref, w_ref, thr_ref, assigned_ref, mb_out_ref, mb,
+    *, tiles_per_block: int, bslots: int, seg_block: int, n_out: int,
+):
+    """Grid-pipelined segment megakernel, unpacked int8 layout.
+
+    Same tile semantics and carry structure as
+    :func:`_kernel_waves_mega_packed` (see its docstring for the
+    pipeline story); the eligibility mask is the plain lane-prefix
+    compare ``lane < cnt`` and the matching state is one int8 byte per
+    substream bit.
+    """
+    b = pl.program_id(0)
+    nblocks = pl.num_programs(0)
+
+    @pl.when(b == 0)
+    def _init():
+        mb[...] = jnp.zeros_like(mb)
+
+    L_pad = mb.shape[1]
+    block = tiles_per_block * bslots
+    lane = jax.lax.broadcasted_iota(jnp.int32, (bslots, L_pad), 1)
+    total_tiles = seg_offsets_ref[seg_offsets_ref.shape[0] - 1] // seg_block
+    tiles_here = jnp.clip(total_tiles - b * tiles_per_block, 0, tiles_per_block)
+
+    # Stage 4 for the whole program at once: thresholds are sorted, so
+    # eligibility is the lane prefix below the per-slot pass count
+    w_all = w_ref[...][:, 0]  # [block]
+    cnt = jnp.sum(
+        (w_all[:, None] >= thr_ref[0, :][None, :]), axis=1, dtype=jnp.int32
+    )
+    te_all = (
+        jax.lax.broadcasted_iota(jnp.int32, (block, L_pad), 1) < cnt[:, None]
+    ).astype(jnp.int8)
+
+    def body(t, carry):
+        mbv, asg = carry
+        # Stage 1: one fused load of the tile's 2*bslots row addresses
+        uv = pl.load(uv_ref, (pl.ds(t * 2 * bslots, 2 * bslots), slice(None)))[:, 0]
+        te = jax.lax.dynamic_slice(te_all, (t * bslots, 0), (bslots, L_pad))
+        # Stage 2-3: one fused gather of all endpoint rows
+        rows = mbv[uv]  # [2 * bslots, L_pad] i8
+        mbu = rows[:bslots]
+        mbw = rows[bslots:]
+        # Stage 5: the matching update, one [bslots, L_pad] tile op
+        add = te & (1 - (mbu | mbw))
+        # Stage 6: functional row scatter into the carried bit block —
+        # duplicate uv rows (sacrificial padding) carry identical values,
+        # so .at[].set is deterministic here
+        mbv = mbv.at[uv].set(rows | jnp.concatenate([add, add]))
+        # Stage 7: highest set bit, vectorized over the tile
+        idx = jnp.max(jnp.where(add > 0, lane, -1), axis=1)  # [bslots]
+        # Stage 8: emit the tile's assignments into the carried block
+        asg = jax.lax.dynamic_update_slice(asg, idx, (t * bslots,))
+        return mbv, asg
+
+    mbf, asgf = jax.lax.fori_loop(
+        0, tiles_here, body, (mb[...], jnp.full((block,), -1, jnp.int32))
+    )
+    mb[...] = mbf
+    assigned_ref[...] = asgf[:, None]
+
+    @pl.when(b == nblocks - 1)
+    def _flush():
+        mb_out_ref[...] = mb[0:n_out, :]
+
+
+def _kernel_waves_mega_packed(
+    seg_offsets_ref, uv_ref, w_ref, thr_ref, assigned_ref, mb_out_ref, mb,
+    *, tiles_per_block: int, bslots: int, seg_block: int, n_out: int,
+):
+    """Grid-pipelined segment megakernel, packed uint8 bit-plane layout.
+
+    The §4.4 pipeline, re-drawn at tile granularity. One *tile* is
+    ``seg_block`` consecutive segment rows of the block-aligned layout
+    (`repro.graph.waves.block_aligned_layout`) — ``bslots = seg_block *
+    SEG`` slots that are guaranteed vertex-disjoint because no tile
+    straddles a wave boundary. Three pipeline levels:
+
+    * **grid** — each program consumes ``tiles_per_block`` tiles; the
+      Pallas grid pipeline double-buffers the HBM->VMEM copy of the next
+      program's slot-stream block behind the current program's compute
+      (the paper's DRAM prefetcher);
+    * **program** — Stage 4 runs once per program as a fused
+      [block]-wide threshold count + prefix-table lookup (thresholds are
+      sorted, so eligibility words are prefixes — see
+      :func:`_prefix_te_table`), saturating the VPU at any L;
+    * **tile loop** — the bit block AND the assigned block are carried
+      as *values* through ``fori_loop`` (gather/compute/scatter as pure
+      array ops, ref I/O only at the program boundary), so one trip
+      costs one fused [2*bslots]-row gather, a handful of [bslots,
+      W_pad] tile ops, and one fused scatter — no per-tile ref traffic,
+      which dominates the discharged interpret-mode execution.
+
+    The caller pre-remaps padding *and self-loop* slots to the
+    sacrificial row with w = 0, so the kernel needs no per-tile
+    ``u != v`` masking. The scalar-prefetched ``seg_offsets`` bound the
+    loop: grid padding beyond the layout's real tile count is skipped
+    entirely (its assigned slots stay -1), not processed-and-discarded.
+    """
+    b = pl.program_id(0)
+    nblocks = pl.num_programs(0)
+
+    @pl.when(b == 0)
+    def _init():
+        mb[...] = jnp.zeros_like(mb)
+
+    W_pad = mb.shape[1]
+    block = tiles_per_block * bslots
+    te_table = _prefix_te_table(W_pad)
+    high_bit = _high_bit_table()
+    word_off = 8 * jax.lax.broadcasted_iota(jnp.int32, (1, W_pad), 1)
+    total_tiles = seg_offsets_ref[seg_offsets_ref.shape[0] - 1] // seg_block
+    tiles_here = jnp.clip(total_tiles - b * tiles_per_block, 0, tiles_per_block)
+
+    # Stage 4 for the whole program at once: count passing thresholds
+    # per slot, then look the packed prefix word up in the table
+    w_all = w_ref[...][:, 0]  # [block]
+    cnt = jnp.sum(
+        (w_all[:, None] >= thr_ref[0, :][None, :]), axis=1, dtype=jnp.int32
+    )
+    te_all = te_table[cnt]  # [block, W_pad] u8
+
+    def body(t, carry):
+        mbv, asg = carry
+        # Stage 1: one fused load of the tile's 2*bslots row addresses
+        uv = pl.load(uv_ref, (pl.ds(t * 2 * bslots, 2 * bslots), slice(None)))[:, 0]
+        te = jax.lax.dynamic_slice(te_all, (t * bslots, 0), (bslots, W_pad))
+        # Stage 2-3: one fused gather of all endpoint rows
+        rows = mbv[uv]  # [2 * bslots, W_pad] u8
+        mbu = rows[:bslots]
+        mbw = rows[bslots:]
+        # Stage 5: matching update — one bitwise op per 8 substreams
+        add = te & ~(mbu | mbw)
+        # Stage 6: functional row scatter into the carried bit block
+        mbv = mbv.at[uv].set(rows | jnp.concatenate([add, add]))
+        # Stage 7: highest set bit via the log2 table, one word at a time
+        idx = jnp.maximum(
+            jnp.max(high_bit[add.astype(jnp.int32)] + word_off, axis=1), -1
+        )
+        # Stage 8: emit the tile's assignments into the carried block
+        asg = jax.lax.dynamic_update_slice(asg, idx, (t * bslots,))
+        return mbv, asg
+
+    mbf, asgf = jax.lax.fori_loop(
+        0, tiles_here, body, (mb[...], jnp.full((block,), -1, jnp.int32))
+    )
+    mb[...] = mbf
+    assigned_ref[...] = asgf[:, None]
+
+    @pl.when(b == nblocks - 1)
+    def _flush():
+        mb_out_ref[...] = mb[0:n_out, :]
+
+
+def substream_match_pallas_mega(
+    uv: jax.Array,  # int32 [2 * total, 1], per-tile column-major (u's then v's)
+    weights: jax.Array,  # f32 [total, 1]; padding/self-loop slots are 0
+    thresholds: jax.Array,  # f32 [1, nbits] sorted flat, +inf in padding slots
+    seg_offsets: jax.Array,  # int32 [num_waves + 1], block-aligned
+    n_pad: int,
+    seg: int,
+    seg_block: int,
+    tiles_per_block: int,
+    interpret: bool = True,
+    packed: bool = True,
+):
+    """Raw pallas_call wrapper for the grid-pipelined megakernel.
+
+    The slot stream is the *block-aligned* layout
+    (`repro.graph.waves.block_aligned_layout`), grid-padded to a
+    ``tiles_per_block`` tile multiple (``total`` slots). ``uv`` is laid
+    out per tile as all ``bslots`` u-rows then all ``bslots`` v-rows, so
+    one contiguous load yields the tile's full gather index vector.
+    Padding AND self-loop slots MUST be pre-remapped to ``u = v = n_pad``
+    (the sacrificial row) with ``w = 0`` — the kernel has no in-loop
+    self-loop test. ``thresholds`` is the *flat sorted* [1, nbits]
+    threshold vector (nbits = 8 * W_pad packed, L_pad unpacked; +inf
+    pads): eligibility is prefix-structured, see :func:`_prefix_te_table`.
+    ``seg_offsets`` rides as scalar prefetch; its last entry bounds the
+    tile loop. Returns (assigned int32 [total] — -1 on every padding
+    slot — and mb as for the waves wrapper).
+    """
+    total = weights.shape[0]
+    bslots = seg_block * seg
+    block = tiles_per_block * bslots
+    assert total % block == 0, (total, tiles_per_block, seg_block, seg)
+    assert uv.shape[0] == 2 * total, (uv.shape, total)
+    nblocks = total // block
+    nbits = thresholds.shape[1]
+    n_rows = n_pad + SACRIFICIAL_ROWS
+    if packed:
+        width = nbits // 8
+        kernel_fn, dtype = _kernel_waves_mega_packed, jnp.uint8
+    else:
+        width = nbits
+        kernel_fn, dtype = _kernel_waves_mega, jnp.int8
+
+    kernel = functools.partial(
+        kernel_fn,
+        tiles_per_block=tiles_per_block,
+        bslots=bslots,
+        seg_block=seg_block,
+        n_out=n_pad,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((2 * block, 1), lambda b, offs: (b, 0)),  # uv stream
+            pl.BlockSpec((block, 1), lambda b, offs: (b, 0)),  # weights
+            pl.BlockSpec((1, nbits), lambda b, offs: (0, 0)),  # thresholds
+        ],
+        out_specs=[
+            pl.BlockSpec((block, 1), lambda b, offs: (b, 0)),
+            pl.BlockSpec((n_pad, width), lambda b, offs: (0, 0)),
+        ],
+        scratch_shapes=[pltpu.VMEM((n_rows, width), dtype)],
+    )
+    assigned, mb = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((total, 1), jnp.int32),
+            jax.ShapeDtypeStruct((n_pad, width), dtype),
+        ],
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary",),
+        ),
+    )(seg_offsets, uv, weights.astype(jnp.float32), thresholds)
+    return assigned[:, 0], mb
 
 
 def substream_match_pallas_waves(

@@ -146,6 +146,17 @@ class WavePlan(VmemPlan):
     block_s: int
     gather_bytes: int
     fill: float
+    #: Mega-path geometry (zero on plain wave plans): ``seg_block``
+    #: segments per tile, ``num_tiles`` real tiles in the block-aligned
+    #: layout, ``tiles_per_block`` tiles per grid program, and
+    #: ``tile_bytes`` the single-buffer working set of one in-flight
+    #: tile — ``gather_bytes`` on a mega plan is ``2 * tile_bytes``
+    #: (double-buffered: the gather of tile k+1 overlaps the
+    #: compute/scatter of tile k).
+    seg_block: int = 0
+    num_tiles: int = 0
+    tiles_per_block: int = 0
+    tile_bytes: int = 0
 
 
 def wave_plan(
@@ -220,6 +231,96 @@ def wave_plan(
     )
 
 
+#: Default segments per megakernel tile. Measured sweet spot of the
+#: tile-count / slot-inflation trade (block-aligned padding grows with
+#: ``seg_block`` while sequential tile trips shrink as ``1/seg_block``);
+#: 2 wins at every benchmarked scale.
+MEGA_SEG_BLOCK = 2
+
+
+def mega_plan(
+    n: int,
+    L: int,
+    layout,
+    packed: bool = True,
+    tiles_per_block: int | None = None,
+) -> WavePlan:
+    """Plan VMEM for the grid-pipelined megakernel over ``layout``
+    (a :class:`repro.graph.waves.BlockAlignedLayout`).
+
+    On top of the resident bit block (plus the sacrificial band) the
+    megakernel keeps one tile's working set in flight — the
+    [2*bslots, width] gathered rows, eligibility/add tiles, the
+    [bslots, 8, width] bit-plane compare, and the index/weight/assigned
+    vectors, ~14 ``width``-wide arrays of ``bslots = seg_block * seg``
+    rows plus 24 B/slot of vectors = ``tile_bytes``. The plan charges
+    **2x** that (``gather_bytes``): the grid pipeline prefetches the
+    next block's stream while the current tile computes, so two tile
+    buffers coexist. The auto ``tiles_per_block`` is the measured
+    interpret-mode sweet spot (64 tiles per program for short layouts,
+    stepping to 128/256 as the tile count grows), clamped to the layout
+    and halved until the double-buffered slot-stream blocks fit the
+    VMEM left over.
+    """
+    seg = int(layout.width)
+    seg_block = int(layout.seg_block)
+    bslots = seg_block * seg
+    num_tiles = int(layout.num_tiles)
+    base = vmem_plan(n, L, packed=packed, block_e=1)
+    tile_bytes = 14 * bslots * base.width + 24 * bslots
+    gather_bytes = 2 * tile_bytes  # double-buffered tile working sets
+    free = VMEM_PER_CORE - min(base.nbytes, VMEM_BIT_BUDGET)
+    if gather_bytes > free:
+        raise ValueError(
+            f"double-buffered mega tiles ({gather_bytes} B at "
+            f"seg_block={seg_block}, seg={seg}) + bit block ({base.nbytes} B) "
+            f"exceed VMEM; rebuild the layout with a smaller seg_block "
+            f"(repro.graph.waves.block_aligned_layout)"
+        )
+    stream_free = free - gather_bytes
+    if tiles_per_block is None:
+        # measured interpret-mode sweet spots: short layouts want small
+        # per-program input copies, long ones amortize program overhead
+        if num_tiles <= 1024:
+            tiles_per_block = 64
+        elif num_tiles <= 4096:
+            tiles_per_block = 128
+        else:
+            tiles_per_block = 256
+        tiles_per_block = max(1, min(tiles_per_block, num_tiles))
+        while (
+            tiles_per_block > 1
+            and tiles_per_block * bslots * _EDGE_BYTES > stream_free
+        ):
+            tiles_per_block //= 2
+    if tiles_per_block * bslots * _EDGE_BYTES > stream_free:
+        raise ValueError(
+            f"slot-stream blocks ({tiles_per_block * bslots * _EDGE_BYTES} B "
+            f"at tiles_per_block={tiles_per_block}, seg_block={seg_block}, "
+            f"seg={seg}) exceed the VMEM left by the bit block and tile "
+            f"buffers ({stream_free} B); lower tiles_per_block "
+            f"(ops.mega_plan) or seg_block"
+        )
+    return WavePlan(
+        n_pad=base.n_pad,
+        width=base.width,
+        words=base.words,
+        nbytes=base.nbytes,
+        block_e=tiles_per_block * bslots,
+        packed=packed,
+        seg=seg,
+        num_waves=int(layout.seg_offsets.shape[0] - 1),
+        num_segments=int(layout.num_segments),
+        block_s=tiles_per_block * seg_block,
+        gather_bytes=gather_bytes,
+        fill=float(layout.fill),
+        seg_block=seg_block,
+        num_tiles=num_tiles,
+        tiles_per_block=tiles_per_block,
+        tile_bytes=tile_bytes,
+    )
+
+
 def _resolve_packed(cfg: SubstreamConfig, packed: bool | None) -> bool:
     if packed is None:
         if cfg.mb_layout not in ("packed", "unpacked"):
@@ -248,6 +349,7 @@ def substream_match(
     schedule: str = "edges",
     waves=None,
     max_width: int | None = None,
+    seg_block: int | None = None,
 ) -> MatchingResult:
     """Run Part 1 on the given stream order via the Pallas kernel.
 
@@ -262,6 +364,13 @@ def substream_match(
       ``m`` inner-loop trips. Pass a precomputed ``waves`` schedule to
       amortize the decomposition across runs; ``max_width`` caps the
       wave width when building one here.
+    * ``"mega"`` — the grid-pipelined megakernel: the wave schedule is
+      re-padded block-aligned (every tile of ``seg_block`` segments is a
+      subset of one wave, hence vertex-disjoint) and each trip processes
+      one whole tile with the bit block carried functionally through the
+      loop. Same bit-identical contract as ``"waves"``, ~``seg_block``x
+      fewer sequential trips; ``seg_block=None`` takes
+      :data:`MEGA_SEG_BLOCK`.
 
     ``packed=None`` follows ``cfg.mb_layout``; ``block_e=None`` takes the
     auto-picked value from :func:`vmem_plan` (edges schedule only).
@@ -279,11 +388,16 @@ def substream_match(
         return _substream_match_edges(
             stream, cfg, block_e=block_e, interpret=interpret, packed=packed
         )
-    if schedule != "waves":
+    if schedule == "waves":
+        return _substream_match_waves(
+            stream, cfg, interpret=interpret, packed=packed,
+            waves=waves, max_width=max_width,
+        )
+    if schedule != "mega":
         raise ValueError(f"unknown schedule {schedule!r}")
-    return _substream_match_waves(
+    return _substream_match_mega(
         stream, cfg, interpret=interpret, packed=packed,
-        waves=waves, max_width=max_width,
+        waves=waves, max_width=max_width, seg_block=seg_block,
     )
 
 
@@ -305,7 +419,9 @@ def _substream_match_edges(
         )
     block_e = plan.block_e
     m = stream.num_edges
-    m_pad = _round_up(m, block_e)
+    # empty streams still run one block of no-op padding edges (u=v=0,
+    # w=0) so the kernel's init/flush executes and mb comes back zeroed
+    m_pad = _round_up(max(m, 1), block_e)
     pad = m_pad - m
 
     edges = jnp.stack([stream.src, stream.dst], axis=1).astype(jnp.int32)
@@ -419,6 +535,124 @@ def _substream_match_waves(
     live = flat >= 0
     assigned = np.full(m, -1, np.int32)
     assigned[flat[live]] = np.asarray(assigned_slots)[: flat.size][live]
+    assigned = jnp.asarray(assigned)
+    if packed:
+        return MatchingResult(assigned=assigned, mb_packed=mb, L=cfg.L)
+    return MatchingResult(assigned=assigned, mb=mb)
+
+
+def _thresholds_flat(cfg: SubstreamConfig, nbits: int) -> jax.Array:
+    """Megakernel-shaped thresholds: [1, nbits] sorted flat, +inf pads.
+
+    The mega kernels exploit the prefix structure of sorted thresholds
+    (see ``kernel._prefix_te_table``), so they take the flat ascending
+    vector instead of the per-bit-plane [8, W_pad] layout.
+    """
+    thr = cfg.thresholds()
+    return jnp.full((1, nbits), jnp.inf, jnp.float32).at[0, : cfg.L].set(thr)
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "cfg", "seg", "seg_block", "tiles_per_block", "n_pad", "width",
+        "words", "interpret", "packed",
+    ),
+)
+def _mega_device(
+    seg_offsets, uv, w, cfg, seg, seg_block, tiles_per_block,
+    n_pad, width, words, interpret, packed,
+):
+    """Jitted device half of the mega path. Thresholds are built inside
+    the jit (a dozen jnp dispatches otherwise dominate small graphs);
+    ``seg_offsets`` rides along as the scalar prefetch so the kernel can
+    bound its tile loop at the layout's real tile count."""
+    thr_flat = _thresholds_flat(cfg, width * 8 if packed else width)
+    assigned_slots, mb = _kernel.substream_match_pallas_mega(
+        uv, w, thr_flat, seg_offsets, n_pad,
+        seg=seg, seg_block=seg_block, tiles_per_block=tiles_per_block,
+        interpret=interpret, packed=packed,
+    )
+    if packed:
+        return assigned_slots, mb[: cfg.n, :words]
+    return assigned_slots, mb[: cfg.n, : cfg.L].astype(bool)
+
+
+def _substream_match_mega(
+    stream: EdgeStream,
+    cfg: SubstreamConfig,
+    interpret: bool,
+    packed: bool,
+    waves=None,
+    max_width: int | None = None,
+    seg_block: int | None = None,
+) -> MatchingResult:
+    from repro.graph import waves as _waves
+
+    if seg_block is None:
+        seg_block = MEGA_SEG_BLOCK
+    src = np.asarray(stream.src)
+    dst = np.asarray(stream.dst)
+    valid = np.asarray(stream.valid)
+    weight = np.asarray(stream.weight)
+    sch = _waves.resolve_schedule(
+        src, dst, valid, schedule=waves, max_width=max_width
+    )
+    layout = _waves.block_aligned_layout(sch, seg_block)
+    plan = mega_plan(cfg.n, cfg.L, layout, packed=packed)
+    if plan.nbytes > VMEM_BIT_BUDGET:
+        raise ValueError(
+            f"matching-bit block {plan.nbytes/2**20:.1f} MiB > VMEM budget; "
+            f"use repro.core.rounds with vertex partitioning"
+        )
+    # host-side slot prep (all vectorized numpy): flatten the aligned
+    # layout; remap padding AND self-loop slots to the sacrificial
+    # bit-block row n_pad with w = 0 (duplicate scatter rows must carry
+    # identical values, and the kernel has no in-loop self-loop test);
+    # pad the tile count up to the grid block — the kernel skips those
+    # padding tiles via the prefetched seg_offsets bound. The uv stream
+    # is laid out per tile as all bslots u-rows then all bslots v-rows,
+    # so the kernel's gather index vector is one contiguous load.
+    flat = layout.slots.reshape(-1)
+    live = flat >= 0
+    pos = flat[live]
+    bslots = seg_block * plan.seg
+    ntiles_pad = _round_up(max(layout.num_tiles, 1), plan.tiles_per_block)
+    total = ntiles_pad * bslots
+    sac = np.int32(plan.n_pad)
+    uflat = np.full(total, sac, np.int32)
+    vflat = np.full(total, sac, np.int32)
+    wf = np.zeros((total, 1), np.float32)
+    lv = np.zeros(total, bool)
+    lv[: flat.size] = live
+    u, v, w = src[pos], dst[pos], weight[pos]
+    loop = u == v
+    uflat[lv] = np.where(loop, sac, u)
+    vflat[lv] = np.where(loop, sac, v)
+    wf[lv, 0] = np.where(loop, 0.0, w.astype(np.float32))
+    uv = np.concatenate(
+        [uflat.reshape(ntiles_pad, bslots), vflat.reshape(ntiles_pad, bslots)],
+        axis=1,
+    ).reshape(-1, 1)
+    assigned_slots, mb = _mega_device(
+        jnp.asarray(layout.seg_offsets),
+        jnp.asarray(uv),
+        jnp.asarray(wf),
+        cfg,
+        plan.seg,
+        seg_block,
+        plan.tiles_per_block,
+        plan.n_pad,
+        plan.width,
+        plan.words,
+        interpret,
+        packed,
+    )
+    # slot -> stream-position scatter on the host: each stream position
+    # occupies exactly one slot, so this is a plain indexed store
+    m = stream.num_edges
+    assigned = np.full(m, -1, np.int32)
+    assigned[pos] = np.asarray(assigned_slots)[: flat.size][live]
     assigned = jnp.asarray(assigned)
     if packed:
         return MatchingResult(assigned=assigned, mb_packed=mb, L=cfg.L)

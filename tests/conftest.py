@@ -5,10 +5,12 @@ import numpy as np
 import pytest
 
 # Make `import repro` work even when PYTHONPATH=src was not exported
-# (plain `pytest` from the repo root).
-_SRC = str(pathlib.Path(__file__).resolve().parent.parent / "src")
-if _SRC not in sys.path:
-    sys.path.insert(0, _SRC)
+# (plain `pytest` from the repo root). The repo root itself rides along
+# for the suites that exercise `benchmarks.*` (e.g. the bench gate).
+_ROOT = pathlib.Path(__file__).resolve().parent.parent
+for _p in (str(_ROOT / "src"), str(_ROOT)):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
 
 # Property tests want the real hypothesis (declared in requirements.txt);
 # in hermetic containers without it, fall back to the deterministic

@@ -1,0 +1,125 @@
+"""Unit tests for the bench acceptance gate (`bench_throughput.check_report`).
+
+The gate is a pure function (synthetic report dict in, verdict +
+messages out) precisely so raising it — e.g. to ISSUE 6's
+``mega >= waves_xla`` — cannot be silently broken by a bench refactor:
+these tests pin the pass/fail semantics, the per-gate messages, and the
+loud failure on structurally broken reports.
+"""
+import json
+import pathlib
+import sys
+
+import pytest
+
+from benchmarks.bench_throughput import (
+    TARGET_FILL,
+    TARGET_MEGA_VS_XLA,
+    TARGET_SPEEDUP,
+    check_report,
+)
+
+
+def _graph(scale=10, speedup=9.0, fill=0.7, mega=1.3):
+    return {
+        "scale": scale,
+        "speedup_pallas_waves_vs_edges": speedup,
+        "wave_fill": fill,
+        "speedup_mega_vs_xla": mega,
+    }
+
+
+def _report(graphs):
+    return {"benchmark": "bench_throughput", "graphs": graphs}
+
+
+def test_all_gates_pass():
+    ok, msgs = check_report(_report([_graph(10), _graph(12), _graph(14)]))
+    assert ok
+    assert len(msgs) == 3
+    assert all(m.startswith("PASS") for m in msgs)
+
+
+def test_mega_gate_fails_below_xla():
+    """The raised gate: mega slower than the XLA oracle on ANY scale fails."""
+    graphs = [_graph(10), _graph(12, mega=0.97), _graph(14)]
+    ok, msgs = check_report(_report(graphs))
+    assert not ok
+    fail = [m for m in msgs if m.startswith("FAIL")]
+    assert len(fail) == 1
+    assert "mega" in fail[0] and "scale 12" in fail[0]
+
+
+def test_mega_gate_boundary_is_inclusive():
+    ok, _ = check_report(_report([_graph(mega=TARGET_MEGA_VS_XLA)]))
+    assert ok
+    ok, _ = check_report(_report([_graph(mega=TARGET_MEGA_VS_XLA - 1e-6)]))
+    assert not ok
+
+
+def test_speedup_and_fill_gates_still_enforced():
+    ok, msgs = check_report(_report([_graph(speedup=TARGET_SPEEDUP - 0.1)]))
+    assert not ok and any("pallas_edges" in m for m in msgs if "FAIL" in m)
+    ok, msgs = check_report(_report([_graph(fill=TARGET_FILL / 2)]))
+    assert not ok and any("fill" in m for m in msgs if "FAIL" in m)
+
+
+def test_worst_scale_is_named():
+    """The message names the scale where the minimum occurred."""
+    graphs = [_graph(10, fill=0.9), _graph(14, fill=0.51)]
+    ok, msgs = check_report(_report(graphs))
+    assert ok
+    fill_msg = next(m for m in msgs if "fill" in m)
+    assert "scale 14" in fill_msg
+
+
+def test_broken_report_fails_loudly():
+    """No graphs / missing keys can never pass vacuously."""
+    ok, msgs = check_report({})
+    assert not ok and "no graphs" in msgs[0]
+    ok, msgs = check_report(_report([]))
+    assert not ok
+    g = _graph()
+    del g["speedup_mega_vs_xla"]
+    ok, msgs = check_report(_report([g]))
+    assert not ok
+    assert any("missing" in m for m in msgs)
+
+
+def test_check_exits_nonzero_with_message(monkeypatch, capsys):
+    """CLI wiring: `--check` on a failing report exits non-zero via
+    SystemExit with a message, after printing each gate verdict — no
+    bare assert anywhere on the path. The bench itself is stubbed out
+    (run_report monkeypatched) so this stays a unit test."""
+    import benchmarks.bench_throughput as bt
+
+    bad = _report([_graph(10, mega=0.5)])
+    monkeypatch.setattr(
+        bt, "run_report", lambda **kw: ([("row", 1.0, "derived")], bad)
+    )
+    monkeypatch.setattr(
+        sys, "argv", ["bench_throughput", "--check", "--no-json"]
+    )
+    with pytest.raises(SystemExit) as exc:
+        bt.main()
+    assert exc.value.code not in (0, None)
+    assert "bench gate FAILED" in str(exc.value.code)
+    out = capsys.readouterr().out
+    assert "# gate:" in out and "FAIL" in out
+
+    good = _report([_graph(10)])
+    monkeypatch.setattr(
+        bt, "run_report", lambda **kw: ([("row", 1.0, "derived")], good)
+    )
+    bt.main()  # all gates pass: returns normally, prints PASS lines
+    out = capsys.readouterr().out
+    assert "PASS" in out and "FAIL" not in out
+
+
+def test_committed_bench_record_passes_gate():
+    """The repo's committed BENCH_substream.json satisfies its own gate
+    (including mega >= waves_xla at every recorded scale)."""
+    path = pathlib.Path(__file__).resolve().parent.parent / "BENCH_substream.json"
+    report = json.loads(path.read_text())
+    ok, msgs = check_report(report)
+    assert ok, msgs

@@ -22,11 +22,17 @@ from hypothesis import given, settings, strategies as st
 from repro.core import EdgeStream, SubstreamConfig, mwm_scan, mwm_waves
 from repro.graph.waves import (
     SEG,
+    block_aligned_layout,
+    check_block_aligned,
     check_schedule,
     greedy_depths,
     wave_schedule,
 )
-from repro.kernels.substream_match.ops import substream_match
+from repro.kernels.substream_match.ops import (
+    VMEM_PER_CORE,
+    mega_plan,
+    substream_match,
+)
 
 SETTINGS = dict(max_examples=15, deadline=None)
 
@@ -150,6 +156,73 @@ def test_packer_determinism():
     b = wave_schedule(src, dst)
     for f in ("wave", "order", "offsets", "slots", "seg_offsets"):
         assert np.array_equal(getattr(a, f), getattr(b, f)), f
+
+
+@given(st.data())
+@settings(**SETTINGS)
+def test_block_aligned_offsets_invariants(data):
+    """Block-aligned re-layout: offsets monotone and seg_block-aligned,
+    every scheduled slot covered exactly once, padding rows only at each
+    wave's tail (the last partial tile is pure -1 padding, which the
+    mega host prep remaps to the sacrificial row n_pad)."""
+    stream, _ = _stream(data.draw)
+    src = np.asarray(stream.src)
+    dst = np.asarray(stream.dst)
+    valid = np.asarray(stream.valid)
+    sch = wave_schedule(src, dst, valid=valid)
+    sb = data.draw(st.sampled_from([1, 2, 3, 4, 8]))
+    layout = block_aligned_layout(sch, sb)
+    check_block_aligned(layout, sch)  # coverage, order, tail-only padding
+    offs = layout.seg_offsets
+    assert offs[0] == 0 and offs[-1] == layout.num_segments
+    assert (np.diff(offs) >= 0).all()
+    assert (offs % sb == 0).all()
+    assert layout.num_segments % sb == 0
+    assert layout.num_tiles * sb == layout.num_segments
+    # alignment only ever adds padding: fill can't exceed the source's
+    assert layout.fill <= sch.fill + 1e-12
+    # each wave pays < one full tile of padding rows
+    segc = np.diff(sch.seg_offsets)
+    assert ((np.diff(offs) - segc) < sb).all()
+    # seg_block=1 is the identity re-layout
+    if sb == 1:
+        assert np.array_equal(layout.slots, sch.slots)
+
+
+@given(st.data())
+@settings(**SETTINGS)
+def test_mega_plan_double_buffer_accounting(data):
+    """WavePlan VMEM totals under double-buffering: the plan charges
+    exactly 2x one tile's working set, and bit block + double-buffered
+    tiles + slot-stream blocks all fit in VMEM_PER_CORE."""
+    stream, cfg = _stream(data.draw, max_n=40, max_m=120)
+    src = np.asarray(stream.src)
+    dst = np.asarray(stream.dst)
+    valid = np.asarray(stream.valid)
+    sch = wave_schedule(src, dst, valid=valid)
+    sb = data.draw(st.sampled_from([1, 2, 4]))
+    layout = block_aligned_layout(sch, sb)
+    packed = data.draw(st.booleans())
+    plan = mega_plan(cfg.n, cfg.L, layout, packed=packed)
+    assert plan.seg_block == sb
+    assert plan.num_tiles == layout.num_tiles
+    assert plan.gather_bytes == 2 * plan.tile_bytes, "double-buffer = 2x tile"
+    assert plan.block_e == plan.tiles_per_block * sb * plan.seg
+    stream_bytes = plan.tiles_per_block * sb * plan.seg * 24 * 2
+    assert plan.nbytes + plan.gather_bytes + stream_bytes <= VMEM_PER_CORE
+    # the resident bit block itself is within the reserved budget
+    assert plan.nbytes == plan.n_pad * plan.width
+
+
+def test_mega_plan_rejects_oversized_tiles():
+    """A seg_block so large the double-buffered tiles can't fit VMEM is
+    rejected with the knob named."""
+    src = np.arange(0, 4000, 2)
+    dst = np.arange(1, 4000, 2)
+    sch = wave_schedule(src, dst)
+    layout = block_aligned_layout(sch, 32768)
+    with pytest.raises(ValueError, match="seg_block"):
+        mega_plan(64, 32, layout)
 
 
 @pytest.mark.parametrize("m", [1, 7, 8, 9, 40000])
