@@ -16,9 +16,14 @@ Compares the six Part-1 engines on Kronecker workloads:
 Besides the CSV rows every benchmark emits, this one writes
 ``BENCH_substream.json`` at the repo root — the measured perf record the
 acceptance gate reads (wave vs per-edge speedup, mega vs the XLA oracle,
-fill, #waves/#segments, scheduler/pack seconds per graph). ``--check``
-runs :func:`check_report` over that record and exits non-zero with the
-violated gates named — never an assert, so CI logs the reason. The wave
+fill, #waves/#segments, scheduler/pack seconds per graph). Every engine
+row additionally carries its telemetry block (``stage_seconds`` —
+schedule/pack/layout/compile/execute — and the plan/schedule
+``counters``), captured by one instrumented cold call + one instrumented
+steady call around the disabled-telemetry timed reps; ``--trace out.json``
+dumps those instrumented calls as Chrome trace-event JSON for Perfetto.
+``--check`` runs :func:`check_report` over the record and exits non-zero
+with the violated gates named — never an assert, so CI logs the reason. The wave
 schedule is built once per graph on the host and its cost reported
 separately (it is reusable across L/eps sweeps and engine runs, like the
 §4.2 lexicographic pre-sort the paper already assumes); the mega engine
@@ -37,13 +42,21 @@ import json
 import pathlib
 import sys
 
+import jax
 import numpy as np
 
 from benchmarks.common import make_workload, timed
+from repro import obs
 from repro.core import mwm_rounds, mwm_scan
 from repro.core.matching import mwm_waves
-from repro.graph.waves import wave_schedule
-from repro.kernels.substream_match.ops import substream_match
+from repro.graph.waves import block_aligned_layout, wave_schedule
+from repro.kernels.substream_match.ops import (
+    MEGA_SEG_BLOCK,
+    mega_plan,
+    substream_match,
+    traffic_bytes,
+    wave_plan,
+)
 
 BENCH_PATH = pathlib.Path(__file__).resolve().parent.parent / "BENCH_substream.json"
 
@@ -68,7 +81,59 @@ SEQUENTIAL_ENGINES = ("scan", "pallas_edges")
 SEQUENTIAL_REPS_CUTOFF = 50_000
 
 
-def _bench_graph(scale: int, edge_factor: int, L: int, eps: float, reps: int):
+def _instrumented_scan(stream, cfg, telemetry):
+    """The scan oracle has no telemetry hook of its own (it is one jitted
+    call with no host stages), so the bench instruments it externally."""
+    rec = obs.recorder(
+        telemetry, "scan", stream.num_edges, jax.default_backend()
+    )
+    key = ("scan", cfg.n, cfg.L, cfg.eps, stream.num_edges)
+    if telemetry.enabled:
+        rec.put("stream.num_edges", stream.num_edges)
+    with rec.device_stage(key):
+        out = mwm_scan(stream, cfg)
+        rec.block(out)
+    rec.finish()
+    return out
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+def _expected_counters(schedule, cfg, L: int) -> dict:
+    """Recompute the plan accounting the wave/mega telemetry counters
+    must reproduce bit-exactly — embedded in the report so
+    :func:`check_report` can cross-check the emitted counters without
+    re-running anything."""
+    wplan = wave_plan(cfg.n, L, schedule)
+    layout = block_aligned_layout(schedule, MEGA_SEG_BLOCK)
+    mplan = mega_plan(cfg.n, L, layout)
+    ns_pad = _round_up(max(schedule.num_segments, 1), wplan.block_s)
+    mega_tiles_pad = _round_up(max(layout.num_tiles, 1), mplan.tiles_per_block)
+    return {
+        "pallas_waves": {
+            "plan.gather_bytes": int(wplan.gather_bytes),
+            "plan.bit_block_bytes": int(wplan.nbytes),
+            "traffic.hbm_bytes": traffic_bytes(
+                ns_pad * wplan.seg, schedule.num_scheduled, wplan.width
+            ),
+        },
+        "pallas_mega": {
+            "plan.gather_bytes": int(mplan.gather_bytes),
+            "plan.bit_block_bytes": int(mplan.nbytes),
+            "traffic.hbm_bytes": traffic_bytes(
+                mega_tiles_pad * mplan.seg_block * mplan.seg,
+                schedule.num_scheduled,
+                mplan.width,
+            ),
+        },
+    }
+
+
+def _bench_graph(
+    scale: int, edge_factor: int, L: int, eps: float, reps: int, telemetry
+):
     stream, cfg = make_workload(scale, edge_factor, L, eps)
     m = stream.num_edges
 
@@ -76,30 +141,67 @@ def _bench_graph(scale: int, edge_factor: int, L: int, eps: float, reps: int):
         np.asarray(stream.src),
         np.asarray(stream.dst),
         valid=np.asarray(stream.valid),
+        telemetry=telemetry,
     )
 
     engines = {
-        "scan": lambda: mwm_scan(stream, cfg),
-        "pallas_edges": lambda: substream_match(stream, cfg, schedule="edges"),
-        "pallas_waves": lambda: substream_match(
-            stream, cfg, schedule="waves", waves=schedule
+        "scan": lambda tel=obs.DISABLED: _instrumented_scan(stream, cfg, tel),
+        "pallas_edges": lambda tel=obs.DISABLED: substream_match(
+            stream, cfg, schedule="edges", telemetry=tel
         ),
-        "pallas_mega": lambda: substream_match(
-            stream, cfg, schedule="mega", waves=schedule
+        "pallas_waves": lambda tel=obs.DISABLED: substream_match(
+            stream, cfg, schedule="waves", waves=schedule, telemetry=tel
         ),
-        "waves_xla": lambda: mwm_waves(stream, cfg, schedule=schedule),
-        "rounds": lambda: mwm_rounds(stream, cfg),
+        "pallas_mega": lambda tel=obs.DISABLED: substream_match(
+            stream, cfg, schedule="mega", waves=schedule, telemetry=tel
+        ),
+        "waves_xla": lambda tel=obs.DISABLED: mwm_waves(
+            stream, cfg, schedule=schedule, telemetry=tel
+        ),
+        "rounds": lambda tel=obs.DISABLED: mwm_rounds(
+            stream, cfg, telemetry=tel
+        ),
     }
     timings = {}
     for name, fn in engines.items():
         r = reps
-        if name in SEQUENTIAL_ENGINES and m > SEQUENTIAL_REPS_CUTOFF:
+        seq_single = name in SEQUENTIAL_ENGINES and m > SEQUENTIAL_REPS_CUTOFF
+        if seq_single:
             r = 1
-        t, _ = timed(fn, reps=r)
+        # measurement protocol: one instrumented cold call captures the
+        # compile stage (and doubles as the warmup), the timed reps run
+        # with telemetry DISABLED (so seconds_per_call stays the raw
+        # engine speed), and one instrumented steady call captures the
+        # execute/schedule/layout split. Sequential engines over the
+        # cutoff reuse the steady instrumented call as their single
+        # timed rep (telemetry overhead is noise at that call length).
+        fn(telemetry)
+        cold = telemetry.match_calls[-1]
+        if seq_single:
+            fn(telemetry)
+            steady = telemetry.match_calls[-1]
+            t = steady.wall_seconds
+        else:
+            t, _ = timed(fn, reps=r, warmup=0)
+            fn(telemetry)
+            steady = telemetry.match_calls[-1]
+        stage_seconds = {
+            s: cold.stage_seconds.get(s, 0.0) + steady.stage_seconds.get(s, 0.0)
+            for s in obs.STAGES
+        }
         timings[name] = {
             "seconds_per_call": t,
             "edges_per_sec": m / t if t > 0 else float("inf"),
             "reps": r,
+            "backend": steady.backend,
+            "interpret": steady.interpret,
+            # stage split summed over the two instrumented calls (cold
+            # contributes compile, steady contributes execute; host
+            # stages appear in both) — disjoint subintervals, so the
+            # stage sum never exceeds telemetry_wall_seconds
+            "stage_seconds": stage_seconds,
+            "telemetry_wall_seconds": cold.wall_seconds + steady.wall_seconds,
+            "counters": {k: steady.counters[k] for k in sorted(steady.counters)},
         }
     speedup = (
         timings["pallas_waves"]["edges_per_sec"]
@@ -123,6 +225,7 @@ def _bench_graph(scale: int, edge_factor: int, L: int, eps: float, reps: int):
         "edges_per_wave": round(m / max(schedule.num_waves, 1), 1),
         "schedule_seconds": schedule.schedule_seconds,
         "pack_seconds": schedule.pack_seconds,
+        "expected_counters": _expected_counters(schedule, cfg, L),
         "engines": timings,
         "speedup_pallas_waves_vs_edges": round(speedup, 2),
         "speedup_mega_vs_xla": round(mega_vs_xla, 2),
@@ -140,9 +243,17 @@ def run(scales=DEFAULT_SCALES, edge_factor=EDGE_FACTOR, L=L, eps=EPS, reps=3,
 
 
 def run_report(scales=DEFAULT_SCALES, edge_factor=EDGE_FACTOR, L=L, eps=EPS,
-               reps=3, emit_json=True, path: pathlib.Path | None = None):
-    """Like :func:`run` but also returns the JSON report (for --check)."""
-    graphs = [_bench_graph(s, edge_factor, L, eps, reps) for s in scales]
+               reps=3, emit_json=True, path: pathlib.Path | None = None,
+               telemetry=None):
+    """Like :func:`run` but also returns the JSON report (for --check).
+
+    ``telemetry`` (default: a fresh :class:`repro.obs.Telemetry`) is the
+    session the instrumented cold/steady calls record into; pass your
+    own to keep the trace (``--trace`` in :func:`main` does).
+    """
+    if telemetry is None:
+        telemetry = obs.Telemetry()
+    graphs = [_bench_graph(s, edge_factor, L, eps, reps, telemetry) for s in scales]
     min_speedup = min(g["speedup_pallas_waves_vs_edges"] for g in graphs)
     min_fill = min(g["wave_fill"] for g in graphs)
     min_mega = min(g["speedup_mega_vs_xla"] for g in graphs)
@@ -212,7 +323,15 @@ def check_report(report: dict) -> tuple[bool, list[str]]:
     * ``pallas_waves`` >= ``TARGET_SPEEDUP`` x ``pallas_edges``;
     * wave fill >= ``TARGET_FILL``;
     * ``pallas_mega`` >= ``TARGET_MEGA_VS_XLA`` x ``waves_xla`` (the
-      raised ISSUE-6 gate: the megakernel must beat the XLA oracle).
+      raised ISSUE-6 gate: the megakernel must beat the XLA oracle);
+    * every engine row carries a complete, internally consistent
+      telemetry block (all five ``stage_seconds`` keys, non-negative,
+      summing within ``telemetry_wall_seconds``; a non-empty
+      ``counters`` dict) — a refactor that drops the instrumentation
+      fails here instead of silently un-observing the bench;
+    * the wave/mega counters reproduce the plan accounting embedded in
+      ``expected_counters`` **bit-exactly** (gather bytes, bit-block
+      bytes, modeled HBM traffic).
     """
     msgs: list[str] = []
     graphs = report.get("graphs")
@@ -239,6 +358,63 @@ def check_report(report: dict) -> tuple[bool, list[str]]:
             f"{'PASS' if verdict else 'FAIL'} {label}: min {worst[key]:.3g} "
             f"at scale {worst.get('scale', '?')} (target >= {target})"
         )
+
+    # telemetry structure + internal consistency, every engine row
+    problems: list[str] = []
+    for g in graphs:
+        scale = g.get("scale", "?")
+        for name, row in g.get("engines", {}).items():
+            where = f"scale {scale} engine {name}"
+            stages = row.get("stage_seconds")
+            if stages is None:
+                problems.append(f"{where}: no stage_seconds")
+                continue
+            wall = row.get("telemetry_wall_seconds")
+            if wall is None:
+                problems.append(f"{where}: no telemetry_wall_seconds")
+                continue
+            problems.extend(
+                f"{where}: {p}"
+                for p in obs.consistency_problems(stages, wall)
+            )
+            if not row.get("counters"):
+                problems.append(f"{where}: no counters")
+    verdict = not problems
+    ok = ok and verdict
+    msgs.append(
+        f"{'PASS' if verdict else 'FAIL'} telemetry stage_seconds/counters "
+        f"on every engine row"
+        + ("" if verdict else ": " + "; ".join(problems))
+    )
+
+    # plan-counter accounting: the emitted wave/mega counters must equal
+    # the independently recomputed plan accounting bit-exactly
+    mismatches: list[str] = []
+    for g in graphs:
+        scale = g.get("scale", "?")
+        expected = g.get("expected_counters")
+        if not expected:
+            mismatches.append(f"scale {scale}: no expected_counters in report")
+            continue
+        for name, want in expected.items():
+            got = g.get("engines", {}).get(name, {}).get("counters", {})
+            for key, val in want.items():
+                if key not in got:
+                    mismatches.append(
+                        f"scale {scale} engine {name}: counter {key!r} missing"
+                    )
+                elif got[key] != val:
+                    mismatches.append(
+                        f"scale {scale} engine {name}: {key} = {got[key]} "
+                        f"!= expected {val}"
+                    )
+    verdict = not mismatches
+    ok = ok and verdict
+    msgs.append(
+        f"{'PASS' if verdict else 'FAIL'} plan-counter accounting "
+        f"(gather/bit-block/traffic bytes bit-exact)"
+        + ("" if verdict else ": " + "; ".join(mismatches))
+    )
     return ok, msgs
 
 
@@ -254,10 +430,18 @@ def main() -> None:
         "--check",
         action="store_true",
         help="exit non-zero unless on every benched graph wave_fill >= "
-        "%.2f, wave-vs-edge speedup >= %.1f, and mega >= %.1fx waves_xla"
+        "%.2f, wave-vs-edge speedup >= %.1f, mega >= %.1fx waves_xla, "
+        "and every engine row carries consistent telemetry"
         % (TARGET_FILL, TARGET_SPEEDUP, TARGET_MEGA_VS_XLA),
     )
+    ap.add_argument(
+        "--trace",
+        metavar="OUT_JSON",
+        help="write the Chrome trace-event JSON of the instrumented "
+        "bench calls here (open in ui.perfetto.dev)",
+    )
     args = ap.parse_args()
+    telemetry = obs.Telemetry()
     rows, report = run_report(
         scales=tuple(args.scales),
         edge_factor=args.edge_factor,
@@ -265,12 +449,16 @@ def main() -> None:
         eps=args.eps,
         reps=args.reps,
         emit_json=not args.no_json,
+        telemetry=telemetry,
     )
     print("name,us_per_call,derived")
     for row in rows:
         print(f"{row[0]},{row[1]:.1f},{row[2]}")
     if not args.no_json:
         print(f"# wrote {BENCH_PATH}")
+    if args.trace:
+        telemetry.write_chrome_trace(args.trace)
+        print(f"# wrote {args.trace}")
     if args.check:
         ok, msgs = check_report(report)
         for msg in msgs:

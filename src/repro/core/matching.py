@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.types import EdgeStream, MatchingResult, SubstreamConfig, eligibility
 
 
@@ -123,6 +124,7 @@ def mwm_waves(
     cfg: SubstreamConfig,
     schedule=None,
     max_width: int | None = None,
+    telemetry=obs.DISABLED,
 ) -> MatchingResult:
     """Listing 1 Part 1 over conflict-free waves (XLA parity oracle).
 
@@ -136,26 +138,51 @@ def mwm_waves(
 
     Host-side scheduling makes this entry point non-jittable at the top
     level (the wave decomposition is data-dependent); the per-wave scan
-    itself is jitted.
+    itself is jitted. ``telemetry`` records the same stage split as the
+    Pallas engines (engine name ``waves_xla``).
     """
     from repro.graph import waves as _waves
 
+    rec = obs.recorder(
+        telemetry, "waves_xla", stream.num_edges, jax.default_backend()
+    )
     src = np.asarray(stream.src)
     dst = np.asarray(stream.dst)
     valid = np.asarray(stream.valid)
-    schedule = _waves.resolve_schedule(
-        src, dst, valid, schedule=schedule, max_width=max_width
+    if schedule is None:
+        schedule = _waves.resolve_schedule(
+            src, dst, valid, schedule=None, max_width=max_width,
+            telemetry=telemetry,
+        )
+        rec.add_stage("schedule", schedule.schedule_seconds)
+        rec.add_stage("pack", schedule.pack_seconds)
+    else:
+        with rec.stage("schedule"):  # precomputed: validation cost only
+            schedule = _waves.resolve_schedule(
+                src, dst, valid, schedule=schedule, max_width=max_width,
+                telemetry=telemetry,
+            )
+    with rec.stage("layout"):
+        u, v, w, ok = _waves.slot_arrays(
+            schedule, src, dst, np.asarray(stream.weight), valid
+        )
+    if telemetry.enabled:
+        rec.put_many(_waves.schedule_counters(schedule))
+        rec.put("stream.num_edges", stream.num_edges)
+    key = (
+        "waves_xla", schedule.num_segments, schedule.width, cfg.n, cfg.L,
+        cfg.eps, stream.num_edges,
     )
-    u, v, w, ok = _waves.slot_arrays(
-        schedule, src, dst, np.asarray(stream.weight), valid
-    )
-    assigned, mb = _wave_scan(
-        jnp.asarray(u),
-        jnp.asarray(v),
-        jnp.asarray(w),
-        jnp.asarray(ok),
-        jnp.asarray(schedule.slots),
-        cfg,
-        stream.num_edges,
-    )
+    with rec.device_stage(key):
+        assigned, mb = _wave_scan(
+            jnp.asarray(u),
+            jnp.asarray(v),
+            jnp.asarray(w),
+            jnp.asarray(ok),
+            jnp.asarray(schedule.slots),
+            cfg,
+            stream.num_edges,
+        )
+        rec.block((assigned, mb))
+    rec.finish()
     return MatchingResult(assigned=assigned, mb=mb)

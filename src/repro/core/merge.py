@@ -12,12 +12,14 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core.types import EdgeStream, MatchingResult, SubstreamConfig
 from repro.core import matching as _matching
 
 
 def merge_host(
-    stream: EdgeStream, result: MatchingResult, cfg: SubstreamConfig
+    stream: EdgeStream, result: MatchingResult, cfg: SubstreamConfig,
+    telemetry=obs.DISABLED,
 ) -> np.ndarray:
     """Faithful Listing 1 Part 2. Returns indices (into the stream) of T.
 
@@ -31,52 +33,68 @@ def merge_host(
     recorded edges instead of the old O(L·m) scan of the whole stream
     per substream. The greedy pass itself is the dependency chain and
     stays a loop, exactly like the paper's sequential post-processor.
+
+    ``telemetry`` records one ``merge.host`` span plus the recorded /
+    matched edge counters.
     """
-    src = np.asarray(stream.src)
-    dst = np.asarray(stream.dst)
-    assigned = np.asarray(result.assigned)
-    recorded = np.nonzero(assigned >= 0)[0]
-    # descending i, stream order within i: stable sort on the major key
-    # alone (``recorded`` is already ascending in stream position)
-    order = recorded[np.argsort(cfg.L - 1 - assigned[recorded], kind="stable")]
-    tbits = np.zeros(cfg.n, dtype=bool)
-    out = []
-    for e in order.tolist():
-        u, v = src[e], dst[e]
-        if not tbits[u] and not tbits[v]:
-            tbits[u] = True
-            tbits[v] = True
-            out.append(e)
-    return np.sort(np.asarray(out, dtype=np.int64))
+    with telemetry.span("merge.host"):
+        src = np.asarray(stream.src)
+        dst = np.asarray(stream.dst)
+        assigned = np.asarray(result.assigned)
+        recorded = np.nonzero(assigned >= 0)[0]
+        # descending i, stream order within i: stable sort on the major key
+        # alone (``recorded`` is already ascending in stream position)
+        order = recorded[np.argsort(cfg.L - 1 - assigned[recorded], kind="stable")]
+        tbits = np.zeros(cfg.n, dtype=bool)
+        out = []
+        for e in order.tolist():
+            u, v = src[e], dst[e]
+            if not tbits[u] and not tbits[v]:
+                tbits[u] = True
+                tbits[v] = True
+                out.append(e)
+        merged = np.sort(np.asarray(out, dtype=np.int64))
+    if telemetry.enabled:
+        telemetry.counters.add("merge.host.calls")
+        telemetry.counters.put("merge.recorded_edges", int(recorded.size))
+        telemetry.counters.put("merge.matched_edges", int(merged.size))
+    return merged
 
 
 def merge_device(
-    stream: EdgeStream, result: MatchingResult, cfg: SubstreamConfig
+    stream: EdgeStream, result: MatchingResult, cfg: SubstreamConfig,
+    telemetry=obs.DISABLED,
 ) -> jax.Array:
     """Device-side merge: bool [m] membership mask of T (beyond-paper).
 
     Re-orders the recorded edges by (descending i, stream position) and runs
     the same one-substream greedy scan. Bit-identical to `merge_host`.
     Like `merge_host`, reads only ``result.assigned`` (packed-safe).
+    ``telemetry`` records one ``merge.device`` span.
     """
-    m = stream.num_edges
-    assigned = result.assigned
-    recorded = assigned >= 0
-    # priority: (L-1-i) major, stream position minor — a *stable* argsort on
-    # the major key alone keeps stream order inside each substream list.
-    major = jnp.where(recorded, cfg.L - 1 - assigned, cfg.L)
-    order = jnp.argsort(major, stable=True)
-    perm = EdgeStream(
-        src=stream.src[order],
-        dst=stream.dst[order],
-        weight=jnp.ones((m,), jnp.float32),  # single substream, all eligible
-        valid=recorded[order],
-    )
-    one = SubstreamConfig(n=cfg.n, L=1, eps=cfg.eps)
-    res = _matching.mwm_scan(perm, one)
-    in_t_perm = res.assigned >= 0
-    # scatter back to stream order
-    mask = jnp.zeros((m,), bool).at[order].set(in_t_perm)
+    with telemetry.span("merge.device"):
+        m = stream.num_edges
+        assigned = result.assigned
+        recorded = assigned >= 0
+        # priority: (L-1-i) major, stream position minor — a *stable* argsort on
+        # the major key alone keeps stream order inside each substream list.
+        major = jnp.where(recorded, cfg.L - 1 - assigned, cfg.L)
+        order = jnp.argsort(major, stable=True)
+        perm = EdgeStream(
+            src=stream.src[order],
+            dst=stream.dst[order],
+            weight=jnp.ones((m,), jnp.float32),  # single substream, all eligible
+            valid=recorded[order],
+        )
+        one = SubstreamConfig(n=cfg.n, L=1, eps=cfg.eps)
+        res = _matching.mwm_scan(perm, one)
+        in_t_perm = res.assigned >= 0
+        # scatter back to stream order
+        mask = jnp.zeros((m,), bool).at[order].set(in_t_perm)
+        if telemetry.enabled:
+            jax.block_until_ready(mask)
+    if telemetry.enabled:
+        telemetry.counters.add("merge.device.calls")
     return mask
 
 

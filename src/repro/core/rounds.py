@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import obs
 from repro.core import bitpack
 from repro.core.types import EdgeStream, MatchingResult, SubstreamConfig
 
@@ -36,7 +37,7 @@ def _vertex_min(pri_el: jax.Array, src, dst, n: int) -> jax.Array:
 
 def mwm_rounds(
     stream: EdgeStream, cfg: SubstreamConfig, max_rounds: int = 0,
-    packed: bool = False, waves=None,
+    packed: bool = False, waves=None, telemetry=obs.DISABLED,
 ) -> MatchingResult:
     """Parallel-rounds equivalent of Listing 1 Part 1 (single device).
 
@@ -54,6 +55,11 @@ def mwm_rounds(
     segment — no conflict resolution needed, because a wave *is* the set
     of edges the fixed point would accept given all earlier waves.
     Output is identical either way.
+
+    ``telemetry`` records the call: the wave path delegates to
+    :func:`repro.core.matching.mwm_waves` (whose ``waves_xla`` record
+    covers the run), the fixed point records one ``rounds`` record whose
+    device stage is the whole while-loop dispatch.
     """
     if waves is not None:
         if max_rounds:
@@ -63,14 +69,28 @@ def mwm_rounds(
             )
         from repro.core import matching as _matching
 
-        res = _matching.mwm_waves(stream, cfg, schedule=waves)
+        res = _matching.mwm_waves(
+            stream, cfg, schedule=waves, telemetry=telemetry
+        )
         if packed:
             return MatchingResult(
                 assigned=res.assigned, mb_packed=bitpack.pack_bits(res.mb),
                 L=cfg.L,
             )
         return res
-    return _mwm_rounds_fixed_point(stream, cfg, max_rounds, packed)
+    rec = obs.recorder(
+        telemetry, "rounds", stream.num_edges, jax.default_backend()
+    )
+    if telemetry.enabled:
+        rec.put("stream.num_edges", stream.num_edges)
+        rec.put("rounds.max_rounds", int(max_rounds))
+    key = ("rounds", cfg.n, cfg.L, cfg.eps, max_rounds, packed,
+           stream.num_edges)
+    with rec.device_stage(key):
+        out = _mwm_rounds_fixed_point(stream, cfg, max_rounds, packed)
+        rec.block(out)
+    rec.finish()
+    return out
 
 
 @partial(jax.jit, static_argnames=("cfg", "max_rounds", "packed"))

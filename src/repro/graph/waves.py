@@ -49,9 +49,10 @@ edge endpoints and order.
 from __future__ import annotations
 
 import dataclasses
-import time
 
 import numpy as np
+
+from repro import obs
 
 #: Slots per segment — the row width of ``WaveSchedule.slots`` and the
 #: trip unit of every vectorized consumer. Waves are padded only up to
@@ -76,8 +77,15 @@ class WaveSchedule:
     ``seg_offsets[k] : seg_offsets[k + 1]`` back-to-back, -1 in the
     (< SEG) padding slots at its tail. Every row is vertex-disjoint (a
     subset of one wave), which is the only invariant row-major consumers
-    need. ``schedule_seconds`` / ``pack_seconds`` record the host cost
-    of the assignment and layout phases.
+    need.
+
+    ``schedule_seconds`` / ``pack_seconds`` record the host cost of the
+    assignment and layout phases. **Deprecated**: both are views of the
+    one telemetry timing path (:class:`repro.obs.stopwatch` spans
+    ``wave_schedule.assign`` / ``wave_schedule.pack``) kept populated
+    for compatibility — new consumers should pass ``telemetry=`` to
+    :func:`wave_schedule` and read the spans or
+    ``MatchTelemetry.stage_seconds`` instead.
     """
 
     wave: np.ndarray
@@ -236,6 +244,7 @@ def wave_schedule(
     order=None,
     max_width: int | None = None,
     seg: int = SEG,
+    telemetry=obs.DISABLED,
 ) -> WaveSchedule:
     """Decompose a stream into vertex-disjoint, fill-packed waves.
 
@@ -252,6 +261,12 @@ def wave_schedule(
     any two edges sharing a vertex land in distinct waves in processing
     order while independent edges pack together. ``seg`` is the slot
     width of the packed layout (see :data:`SEG`).
+
+    ``telemetry`` records the two host phases as spans
+    (``wave_schedule.assign`` / ``wave_schedule.pack``) plus the
+    schedule geometry counters; the deprecated ``schedule_seconds`` /
+    ``pack_seconds`` fields are populated from the *same* stopwatch
+    measurements, so there is one timing path either way.
     """
     src = np.asarray(src, dtype=np.int64)
     dst = np.asarray(dst, dtype=np.int64)
@@ -268,49 +283,85 @@ def wave_schedule(
     positions = np.arange(m) if order is None else np.asarray(order, dtype=np.int64)
     positions = positions[valid_np[positions]]
 
-    t0 = time.perf_counter()
-    su = src[positions]
-    sv = dst[positions]
-    if max_width is None:
-        wave_of_rank = _assign_depth_batched(su, sv)
-    else:
-        wave_of_rank = _assign_earliest_fit(su, sv, max_width)
-    wave = np.full(m, -1, dtype=np.int64)
-    wave[positions] = wave_of_rank
-    t1 = time.perf_counter()
+    with obs.stopwatch(telemetry, "wave_schedule.assign") as sw_assign:
+        su = src[positions]
+        sv = dst[positions]
+        if max_width is None:
+            wave_of_rank = _assign_depth_batched(su, sv)
+        else:
+            wave_of_rank = _assign_earliest_fit(su, sv, max_width)
+        wave = np.full(m, -1, dtype=np.int64)
+        wave[positions] = wave_of_rank
 
-    num_waves = int(wave_of_rank.max()) + 1 if wave_of_rank.size else 0
-    scheduled = np.nonzero(wave >= 0)[0]
-    # wave-major, stream-position-minor: stable sort on the wave key alone
-    # (``scheduled`` is already ascending in stream position)
-    order_out = scheduled[np.argsort(wave[scheduled], kind="stable")]
-    counts = np.bincount(wave[scheduled], minlength=max(num_waves, 1))[:num_waves]
-    offsets = np.zeros(num_waves + 1, dtype=np.int64)
-    np.cumsum(counts, out=offsets[1:])
+    with obs.stopwatch(telemetry, "wave_schedule.pack") as sw_pack:
+        num_waves = int(wave_of_rank.max()) + 1 if wave_of_rank.size else 0
+        scheduled = np.nonzero(wave >= 0)[0]
+        # wave-major, stream-position-minor: stable sort on the wave key alone
+        # (``scheduled`` is already ascending in stream position)
+        order_out = scheduled[np.argsort(wave[scheduled], kind="stable")]
+        counts = np.bincount(wave[scheduled], minlength=max(num_waves, 1))[:num_waves]
+        offsets = np.zeros(num_waves + 1, dtype=np.int64)
+        np.cumsum(counts, out=offsets[1:])
 
-    # fill-packed layout: wave k occupies ceil(counts[k] / seg) segment
-    # rows back-to-back; only its last row carries (< seg) padding
-    seg_counts = -(-counts // seg)
-    seg_offsets = np.zeros(num_waves + 1, dtype=np.int64)
-    np.cumsum(seg_counts, out=seg_offsets[1:])
-    num_segments = int(seg_offsets[-1])
-    slots = np.full((num_segments, seg), -1, dtype=np.int64)
-    if num_segments:
-        within = np.arange(len(order_out)) - np.repeat(offsets[:-1], counts)
-        row = np.repeat(seg_offsets[:-1], counts) + within // seg
-        slots[row, within % seg] = order_out
-    t2 = time.perf_counter()
+        # fill-packed layout: wave k occupies ceil(counts[k] / seg) segment
+        # rows back-to-back; only its last row carries (< seg) padding
+        seg_counts = -(-counts // seg)
+        seg_offsets = np.zeros(num_waves + 1, dtype=np.int64)
+        np.cumsum(seg_counts, out=seg_offsets[1:])
+        num_segments = int(seg_offsets[-1])
+        slots = np.full((num_segments, seg), -1, dtype=np.int64)
+        if num_segments:
+            within = np.arange(len(order_out)) - np.repeat(offsets[:-1], counts)
+            row = np.repeat(seg_offsets[:-1], counts) + within // seg
+            slots[row, within % seg] = order_out
 
-    return WaveSchedule(
+    schedule = WaveSchedule(
         wave=wave.astype(np.int32),
         order=order_out.astype(np.int32),
         offsets=offsets.astype(np.int32),
         slots=slots.astype(np.int32),
         seg_offsets=seg_offsets.astype(np.int32),
         num_edges=m,
-        schedule_seconds=t1 - t0,
-        pack_seconds=t2 - t1,
+        schedule_seconds=sw_assign.seconds,
+        pack_seconds=sw_pack.seconds,
     )
+    if telemetry.enabled:
+        telemetry.counters.update(schedule_counters(schedule))
+    return schedule
+
+
+def schedule_counters(schedule: WaveSchedule) -> dict:
+    """The schedule-geometry counter set (``schedule.*``).
+
+    Bit-exact copies of the schedule's own accounting — the telemetry
+    layer's view of what the scheduler already computed (and used to
+    throw away). Shared by :func:`wave_schedule` and the engine
+    recorders in ``kernels/substream_match/ops.py``.
+    """
+    return {
+        "schedule.num_edges": int(schedule.num_edges),
+        "schedule.num_waves": int(schedule.num_waves),
+        "schedule.num_segments": int(schedule.num_segments),
+        "schedule.seg_width": int(schedule.width),
+        "schedule.num_scheduled": int(schedule.num_scheduled),
+        "schedule.padding_slots": int(schedule.slots.size - schedule.num_scheduled),
+        "schedule.max_wave_size": int(schedule.max_wave_size),
+        "schedule.fill": float(schedule.fill),
+    }
+
+
+def layout_counters(layout: "BlockAlignedLayout", schedule: WaveSchedule) -> dict:
+    """The block-aligned layout counter set (``layout.*``) — the mega
+    path's extra padding accounting on top of :func:`schedule_counters`."""
+    live = int((layout.slots >= 0).sum())
+    return {
+        "layout.num_tiles": int(layout.num_tiles),
+        "layout.num_segments": int(layout.num_segments),
+        "layout.seg_block": int(layout.seg_block),
+        "layout.padding_rows": int(layout.num_segments - schedule.num_segments),
+        "layout.padding_slots": int(layout.slots.size - live),
+        "layout.fill": float(layout.fill),
+    }
 
 
 def validate_schedule(schedule: WaveSchedule, src, dst, valid=None) -> None:
@@ -385,16 +436,21 @@ def resolve_schedule(
     valid,
     schedule: WaveSchedule | None = None,
     max_width: int | None = None,
+    telemetry=obs.DISABLED,
 ) -> WaveSchedule:
     """Build a schedule for the stream, or validate a precomputed one.
 
     The single entry every wave consumer (`mwm_waves`, the Pallas wave
     path, rounds-with-waves) goes through, so the validation rules stay
-    in one place.
+    in one place. ``telemetry`` records the build (or validation) cost
+    as ``wave_schedule.*`` spans.
     """
     if schedule is None:
-        return wave_schedule(src, dst, valid=valid, max_width=max_width)
-    validate_schedule(schedule, src, dst, valid)
+        return wave_schedule(
+            src, dst, valid=valid, max_width=max_width, telemetry=telemetry
+        )
+    with telemetry.span("wave_schedule.validate"):
+        validate_schedule(schedule, src, dst, valid)
     return schedule
 
 

@@ -33,6 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import bitpack
 from repro.core.types import EdgeStream, MatchingResult, SubstreamConfig
 from repro.kernels.substream_match import kernel as _kernel
@@ -118,11 +119,67 @@ def resolve_interpret(interpret: bool | None) -> bool:
     """``None`` = auto: interpret everywhere except on a real TPU backend.
 
     Explicit True/False always wins (debugging a kernel in interpret mode
-    on TPU, or forcing compilation in tests, stays possible).
+    on TPU, or forcing compilation in tests, stays possible). The flip
+    is no longer silent: :func:`substream_match` emits one structured
+    ``substream_match.backend`` telemetry event (backend, interpret,
+    engine) per call, so bench JSON records which backend actually ran.
     """
     if interpret is None:
         return jax.default_backend() != "tpu"
     return bool(interpret)
+
+
+#: Bytes one slot occupies in the kernel's HBM slot stream: (src, dst)
+#: int32 in, weight f32 in, assigned int32 out — a single buffer (the
+#: double-buffering of ``_EDGE_BYTES`` is a VMEM *capacity* cost, not
+#: extra HBM traffic).
+SLOT_STREAM_BYTES = 16
+
+
+def traffic_bytes(total_slots: int, live_slots: int, width: int) -> int:
+    """Modeled per-call HBM traffic of the row-addressed kernels.
+
+    The slot stream in + assigned out (``SLOT_STREAM_BYTES`` per padded
+    slot) plus the bit-block row traffic: two row gathers and two row
+    scatters of ``width`` bytes per live slot. This is the bytes-moved
+    term :func:`repro.launch.roofline.substream_achieved` divides by —
+    exact integers from the plan accounting, so telemetry counters
+    derived from it are reproducible bit-exactly.
+    """
+    return total_slots * SLOT_STREAM_BYTES + live_slots * 4 * width
+
+
+def plan_counters(plan: VmemPlan) -> dict:
+    """The plan-accounting counter set (``plan.*``) for telemetry.
+
+    Bit-exact copies of the :func:`vmem_plan` / :func:`wave_plan` /
+    :func:`mega_plan` fields — tests and the bench gate compare these
+    ``==`` against a recomputed plan, so no derived or rounded values.
+    """
+    out = {
+        "plan.n_pad": int(plan.n_pad),
+        "plan.width": int(plan.width),
+        "plan.words": int(plan.words),
+        "plan.bit_block_bytes": int(plan.nbytes),
+        "plan.block_e": int(plan.block_e),
+        "plan.packed": int(plan.packed),
+    }
+    if isinstance(plan, WavePlan):
+        out.update(
+            {
+                "plan.seg": int(plan.seg),
+                "plan.num_waves": int(plan.num_waves),
+                "plan.num_segments": int(plan.num_segments),
+                "plan.block_s": int(plan.block_s),
+                "plan.gather_bytes": int(plan.gather_bytes),
+                "plan.fill": float(plan.fill),
+                "plan.seg_block": int(plan.seg_block),
+                "plan.num_tiles": int(plan.num_tiles),
+                "plan.tiles_per_block": int(plan.tiles_per_block),
+                "plan.tile_bytes": int(plan.tile_bytes),
+            }
+        )
+    return out
 
 
 @dataclasses.dataclass(frozen=True)
@@ -350,6 +407,7 @@ def substream_match(
     waves=None,
     max_width: int | None = None,
     seg_block: int | None = None,
+    telemetry=obs.DISABLED,
 ) -> MatchingResult:
     """Run Part 1 on the given stream order via the Pallas kernel.
 
@@ -379,26 +437,73 @@ def substream_match(
     ``mb_packed`` (uint8 bit planes) and unpacks to the bool ``mb`` view
     lazily; both layouts are bit-identical in ``assigned`` and ``mb``.
 
+    ``telemetry`` (a :class:`repro.obs.Telemetry`; default: the no-op
+    :data:`repro.obs.DISABLED`) records one ``substream_match.backend``
+    event naming the backend that actually ran, stage spans
+    (schedule/pack/layout/compile/execute), the plan/schedule counters,
+    and a per-call :class:`repro.obs.MatchTelemetry` appended to
+    ``telemetry.match_calls``.
+
     Raises if the bit block exceeds the VMEM budget — at that size the
     caller must vertex-partition (core.rounds) instead.
     """
     interpret = resolve_interpret(interpret)
     packed = _resolve_packed(cfg, packed)
+    if telemetry.enabled:
+        telemetry.event(
+            "substream_match.backend",
+            engine=schedule,
+            backend=jax.default_backend(),
+            interpret=bool(interpret),
+        )
     if schedule == "edges":
-        return _substream_match_edges(
-            stream, cfg, block_e=block_e, interpret=interpret, packed=packed
+        return _edges_entry(
+            stream, cfg, block_e=block_e, interpret=interpret, packed=packed,
+            telemetry=telemetry,
         )
     if schedule == "waves":
         return _substream_match_waves(
             stream, cfg, interpret=interpret, packed=packed,
-            waves=waves, max_width=max_width,
+            waves=waves, max_width=max_width, telemetry=telemetry,
         )
     if schedule != "mega":
         raise ValueError(f"unknown schedule {schedule!r}")
     return _substream_match_mega(
         stream, cfg, interpret=interpret, packed=packed,
         waves=waves, max_width=max_width, seg_block=seg_block,
+        telemetry=telemetry,
     )
+
+
+def _edges_entry(
+    stream: EdgeStream,
+    cfg: SubstreamConfig,
+    block_e: int | None,
+    interpret: bool,
+    packed: bool,
+    telemetry,
+) -> MatchingResult:
+    """Telemetry shell of the per-edge engine (the jitted body is
+    :func:`_substream_match_edges`, unchanged). The edges path has no
+    host scheduling, so schedule/pack/layout stages stay 0."""
+    m = stream.num_edges
+    rec = obs.recorder(
+        telemetry, "pallas_edges", m, jax.default_backend(), interpret
+    )
+    if telemetry.enabled:
+        plan = vmem_plan(cfg.n, cfg.L, packed=packed, block_e=block_e, m=m)
+        m_pad = _round_up(max(m, 1), plan.block_e)
+        rec.put_many(plan_counters(plan))
+        rec.put("stream.num_edges", m)
+        rec.put("traffic.hbm_bytes", traffic_bytes(m_pad, m, plan.width))
+    key = ("edges", cfg.n, cfg.L, cfg.eps, packed, interpret, block_e, m)
+    with rec.device_stage(key):
+        out = _substream_match_edges(
+            stream, cfg, block_e=block_e, interpret=interpret, packed=packed
+        )
+        rec.block(out)
+    rec.finish()
+    return out
 
 
 @partial(jax.jit, static_argnames=("cfg", "block_e", "interpret", "packed"))
@@ -483,59 +588,93 @@ def _substream_match_waves(
     packed: bool,
     waves=None,
     max_width: int | None = None,
+    telemetry=obs.DISABLED,
 ) -> MatchingResult:
     from repro.graph import waves as _waves
 
+    rec = obs.recorder(
+        telemetry, "pallas_waves", stream.num_edges,
+        jax.default_backend(), interpret,
+    )
     src = np.asarray(stream.src)
     dst = np.asarray(stream.dst)
     valid = np.asarray(stream.valid)
-    waves = _waves.resolve_schedule(
-        src, dst, valid, schedule=waves, max_width=max_width
-    )
+    if waves is None:
+        # built in-call: the schedule's own stopwatch measurements are
+        # the stage split (assign -> "schedule", layout -> "pack")
+        waves = _waves.resolve_schedule(
+            src, dst, valid, schedule=None, max_width=max_width,
+            telemetry=telemetry,
+        )
+        rec.add_stage("schedule", waves.schedule_seconds)
+        rec.add_stage("pack", waves.pack_seconds)
+    else:
+        with rec.stage("schedule"):  # precomputed: validation cost only
+            waves = _waves.resolve_schedule(
+                src, dst, valid, schedule=waves, max_width=max_width,
+                telemetry=telemetry,
+            )
     plan = wave_plan(cfg.n, cfg.L, waves, packed=packed)
     if plan.nbytes > VMEM_BIT_BUDGET:
         raise ValueError(
             f"matching-bit block {plan.nbytes/2**20:.1f} MiB > VMEM budget; "
             f"use repro.core.rounds with vertex partitioning"
         )
-    u, v, w, ok = _waves.slot_arrays(
-        waves, src, dst, np.asarray(stream.weight), valid
+    with rec.stage("layout"):
+        u, v, w, ok = _waves.slot_arrays(
+            waves, src, dst, np.asarray(stream.weight), valid
+        )
+        # host-side slot prep (all vectorized numpy): remap padding slots to
+        # the sacrificial bit-block row n_pad — the in-place row scatter
+        # needs duplicate row indices to carry identical values, which a
+        # padding alias of real vertex 0 would break — and pad the segment
+        # count up to the grid block
+        ns = u.shape[0]
+        ns_pad = _round_up(max(ns, 1), plan.block_s)
+        total = ns_pad * plan.seg
+        sac = np.int32(plan.n_pad)
+        edges = np.full((total, 2), sac, np.int32)
+        wf = np.zeros((total, 1), np.float32)
+        okf = ok.reshape(-1)
+        edges[: ns * plan.seg, 0] = np.where(okf, u.reshape(-1), sac)
+        edges[: ns * plan.seg, 1] = np.where(okf, v.reshape(-1), sac)
+        wf[: ns * plan.seg, 0] = w.reshape(-1)
+    if telemetry.enabled:
+        rec.put_many(_waves.schedule_counters(waves))
+        rec.put_many(plan_counters(plan))
+        rec.put("stream.num_edges", stream.num_edges)
+        rec.put(
+            "traffic.hbm_bytes",
+            traffic_bytes(total, waves.num_scheduled, plan.width),
+        )
+    key = (
+        "waves", plan.seg, plan.block_s, plan.n_pad, plan.width, plan.words,
+        interpret, packed, total, cfg.n, cfg.L, cfg.eps,
     )
-    # host-side slot prep (all vectorized numpy): remap padding slots to
-    # the sacrificial bit-block row n_pad — the in-place row scatter
-    # needs duplicate row indices to carry identical values, which a
-    # padding alias of real vertex 0 would break — and pad the segment
-    # count up to the grid block
-    ns = u.shape[0]
-    ns_pad = _round_up(max(ns, 1), plan.block_s)
-    total = ns_pad * plan.seg
-    sac = np.int32(plan.n_pad)
-    edges = np.full((total, 2), sac, np.int32)
-    wf = np.zeros((total, 1), np.float32)
-    okf = ok.reshape(-1)
-    edges[: ns * plan.seg, 0] = np.where(okf, u.reshape(-1), sac)
-    edges[: ns * plan.seg, 1] = np.where(okf, v.reshape(-1), sac)
-    wf[: ns * plan.seg, 0] = w.reshape(-1)
-    assigned_slots, mb = _waves_device(
-        jnp.asarray(edges),
-        jnp.asarray(wf),
-        cfg,
-        plan.seg,
-        plan.block_s,
-        plan.n_pad,
-        plan.width,
-        plan.words,
-        interpret,
-        packed,
-    )
-    # slot -> stream-position scatter on the host: each stream position
-    # occupies exactly one slot, so this is a plain indexed store
-    m = stream.num_edges
-    flat = waves.slots.reshape(-1)
-    live = flat >= 0
-    assigned = np.full(m, -1, np.int32)
-    assigned[flat[live]] = np.asarray(assigned_slots)[: flat.size][live]
-    assigned = jnp.asarray(assigned)
+    with rec.device_stage(key):
+        assigned_slots, mb = _waves_device(
+            jnp.asarray(edges),
+            jnp.asarray(wf),
+            cfg,
+            plan.seg,
+            plan.block_s,
+            plan.n_pad,
+            plan.width,
+            plan.words,
+            interpret,
+            packed,
+        )
+        rec.block((assigned_slots, mb))
+    with rec.stage("layout"):
+        # slot -> stream-position scatter on the host: each stream position
+        # occupies exactly one slot, so this is a plain indexed store
+        m = stream.num_edges
+        flat = waves.slots.reshape(-1)
+        live = flat >= 0
+        assigned = np.full(m, -1, np.int32)
+        assigned[flat[live]] = np.asarray(assigned_slots)[: flat.size][live]
+        assigned = jnp.asarray(assigned)
+    rec.finish()
     if packed:
         return MatchingResult(assigned=assigned, mb_packed=mb, L=cfg.L)
     return MatchingResult(assigned=assigned, mb=mb)
@@ -586,74 +725,109 @@ def _substream_match_mega(
     waves=None,
     max_width: int | None = None,
     seg_block: int | None = None,
+    telemetry=obs.DISABLED,
 ) -> MatchingResult:
     from repro.graph import waves as _waves
 
     if seg_block is None:
         seg_block = MEGA_SEG_BLOCK
+    rec = obs.recorder(
+        telemetry, "pallas_mega", stream.num_edges,
+        jax.default_backend(), interpret,
+    )
     src = np.asarray(stream.src)
     dst = np.asarray(stream.dst)
     valid = np.asarray(stream.valid)
     weight = np.asarray(stream.weight)
-    sch = _waves.resolve_schedule(
-        src, dst, valid, schedule=waves, max_width=max_width
-    )
-    layout = _waves.block_aligned_layout(sch, seg_block)
+    if waves is None:
+        sch = _waves.resolve_schedule(
+            src, dst, valid, schedule=None, max_width=max_width,
+            telemetry=telemetry,
+        )
+        rec.add_stage("schedule", sch.schedule_seconds)
+        rec.add_stage("pack", sch.pack_seconds)
+    else:
+        with rec.stage("schedule"):  # precomputed: validation cost only
+            sch = _waves.resolve_schedule(
+                src, dst, valid, schedule=waves, max_width=max_width,
+                telemetry=telemetry,
+            )
+    with rec.stage("layout"):
+        layout = _waves.block_aligned_layout(sch, seg_block)
     plan = mega_plan(cfg.n, cfg.L, layout, packed=packed)
     if plan.nbytes > VMEM_BIT_BUDGET:
         raise ValueError(
             f"matching-bit block {plan.nbytes/2**20:.1f} MiB > VMEM budget; "
             f"use repro.core.rounds with vertex partitioning"
         )
-    # host-side slot prep (all vectorized numpy): flatten the aligned
-    # layout; remap padding AND self-loop slots to the sacrificial
-    # bit-block row n_pad with w = 0 (duplicate scatter rows must carry
-    # identical values, and the kernel has no in-loop self-loop test);
-    # pad the tile count up to the grid block — the kernel skips those
-    # padding tiles via the prefetched seg_offsets bound. The uv stream
-    # is laid out per tile as all bslots u-rows then all bslots v-rows,
-    # so the kernel's gather index vector is one contiguous load.
-    flat = layout.slots.reshape(-1)
-    live = flat >= 0
-    pos = flat[live]
-    bslots = seg_block * plan.seg
-    ntiles_pad = _round_up(max(layout.num_tiles, 1), plan.tiles_per_block)
-    total = ntiles_pad * bslots
-    sac = np.int32(plan.n_pad)
-    uflat = np.full(total, sac, np.int32)
-    vflat = np.full(total, sac, np.int32)
-    wf = np.zeros((total, 1), np.float32)
-    lv = np.zeros(total, bool)
-    lv[: flat.size] = live
-    u, v, w = src[pos], dst[pos], weight[pos]
-    loop = u == v
-    uflat[lv] = np.where(loop, sac, u)
-    vflat[lv] = np.where(loop, sac, v)
-    wf[lv, 0] = np.where(loop, 0.0, w.astype(np.float32))
-    uv = np.concatenate(
-        [uflat.reshape(ntiles_pad, bslots), vflat.reshape(ntiles_pad, bslots)],
-        axis=1,
-    ).reshape(-1, 1)
-    assigned_slots, mb = _mega_device(
-        jnp.asarray(layout.seg_offsets),
-        jnp.asarray(uv),
-        jnp.asarray(wf),
-        cfg,
-        plan.seg,
-        seg_block,
-        plan.tiles_per_block,
-        plan.n_pad,
-        plan.width,
-        plan.words,
-        interpret,
-        packed,
+    with rec.stage("layout"):
+        # host-side slot prep (all vectorized numpy): flatten the aligned
+        # layout; remap padding AND self-loop slots to the sacrificial
+        # bit-block row n_pad with w = 0 (duplicate scatter rows must carry
+        # identical values, and the kernel has no in-loop self-loop test);
+        # pad the tile count up to the grid block — the kernel skips those
+        # padding tiles via the prefetched seg_offsets bound. The uv stream
+        # is laid out per tile as all bslots u-rows then all bslots v-rows,
+        # so the kernel's gather index vector is one contiguous load.
+        flat = layout.slots.reshape(-1)
+        live = flat >= 0
+        pos = flat[live]
+        bslots = seg_block * plan.seg
+        ntiles_pad = _round_up(max(layout.num_tiles, 1), plan.tiles_per_block)
+        total = ntiles_pad * bslots
+        sac = np.int32(plan.n_pad)
+        uflat = np.full(total, sac, np.int32)
+        vflat = np.full(total, sac, np.int32)
+        wf = np.zeros((total, 1), np.float32)
+        lv = np.zeros(total, bool)
+        lv[: flat.size] = live
+        u, v, w = src[pos], dst[pos], weight[pos]
+        loop = u == v
+        uflat[lv] = np.where(loop, sac, u)
+        vflat[lv] = np.where(loop, sac, v)
+        wf[lv, 0] = np.where(loop, 0.0, w.astype(np.float32))
+        uv = np.concatenate(
+            [uflat.reshape(ntiles_pad, bslots), vflat.reshape(ntiles_pad, bslots)],
+            axis=1,
+        ).reshape(-1, 1)
+    if telemetry.enabled:
+        rec.put_many(_waves.schedule_counters(sch))
+        rec.put_many(_waves.layout_counters(layout, sch))
+        rec.put_many(plan_counters(plan))
+        rec.put("stream.num_edges", stream.num_edges)
+        rec.put(
+            "traffic.hbm_bytes",
+            traffic_bytes(total, int(pos.size), plan.width),
+        )
+    key = (
+        "mega", plan.seg, seg_block, plan.tiles_per_block, plan.n_pad,
+        plan.width, plan.words, interpret, packed, total,
+        layout.seg_offsets.shape[0], cfg.n, cfg.L, cfg.eps,
     )
-    # slot -> stream-position scatter on the host: each stream position
-    # occupies exactly one slot, so this is a plain indexed store
-    m = stream.num_edges
-    assigned = np.full(m, -1, np.int32)
-    assigned[pos] = np.asarray(assigned_slots)[: flat.size][live]
-    assigned = jnp.asarray(assigned)
+    with rec.device_stage(key):
+        assigned_slots, mb = _mega_device(
+            jnp.asarray(layout.seg_offsets),
+            jnp.asarray(uv),
+            jnp.asarray(wf),
+            cfg,
+            plan.seg,
+            seg_block,
+            plan.tiles_per_block,
+            plan.n_pad,
+            plan.width,
+            plan.words,
+            interpret,
+            packed,
+        )
+        rec.block((assigned_slots, mb))
+    with rec.stage("layout"):
+        # slot -> stream-position scatter on the host: each stream position
+        # occupies exactly one slot, so this is a plain indexed store
+        m = stream.num_edges
+        assigned = np.full(m, -1, np.int32)
+        assigned[pos] = np.asarray(assigned_slots)[: flat.size][live]
+        assigned = jnp.asarray(assigned)
+    rec.finish()
     if packed:
         return MatchingResult(assigned=assigned, mb_packed=mb, L=cfg.L)
     return MatchingResult(assigned=assigned, mb=mb)

@@ -1,0 +1,103 @@
+"""Metrics registry — the quantities the plans compute but used to throw away.
+
+A :class:`Counters` is a flat name → number registry with two write
+modes: :meth:`add` accumulates (call counts, cache hits, bytes moved)
+and :meth:`put` overwrites (gauges: fill, plan geometry). Names are
+dotted, lowercase, and cataloged in ``docs/observability.md`` — e.g.
+``schedule.num_waves``, ``plan.gather_bytes``, ``jit.variant_misses``.
+
+Values are plain Python ints/floats copied bit-exactly from their
+sources (``WavePlan``/``mega_plan`` accounting, ``WaveSchedule``
+geometry), so tests can compare them ``==`` against a recomputed plan —
+the registry never rounds or rescales.
+
+The disabled path is :data:`NULL_COUNTERS`, a shared no-op instance;
+like the null span it allocates nothing per call.
+
+The module also owns the process-wide jit-variant ledger
+(:func:`variant_seen`): engines key their compiled variants by
+``(engine, seg, width, L, ...)`` and ask the ledger whether this call
+is a first (compile) or repeat (execute) — tracked unconditionally
+(one tuple hash per engine call) so that warm-up calls made with
+telemetry disabled still count as warm when telemetry turns on.
+"""
+from __future__ import annotations
+
+
+class Counters:
+    """Flat metrics registry: dotted names → int/float values."""
+
+    __slots__ = ("_vals",)
+
+    def __init__(self):
+        self._vals: dict[str, float] = {}
+
+    def add(self, name: str, value=1):
+        """Accumulate ``value`` onto ``name`` (missing counters start at 0)."""
+        self._vals[name] = self._vals.get(name, 0) + value
+
+    def put(self, name: str, value):
+        """Set gauge ``name`` to exactly ``value`` (overwrites)."""
+        self._vals[name] = value
+
+    def get(self, name: str, default=0):
+        return self._vals.get(name, default)
+
+    def update(self, other: dict, prefix: str = ""):
+        """Bulk :meth:`put` from a dict, optionally under ``prefix``."""
+        for k, v in other.items():
+            self._vals[prefix + k] = v
+
+    def asdict(self) -> dict:
+        """Plain sorted dict copy (JSON-ready)."""
+        return {k: self._vals[k] for k in sorted(self._vals)}
+
+    def __len__(self) -> int:
+        return len(self._vals)
+
+    def __repr__(self) -> str:
+        return f"Counters({self._vals!r})"
+
+
+class _NullCounters:
+    """Shared no-op registry for the disabled path."""
+
+    __slots__ = ()
+
+    def add(self, name, value=1):
+        pass
+
+    def put(self, name, value):
+        pass
+
+    def get(self, name, default=0):
+        return default
+
+    def update(self, other, prefix=""):
+        pass
+
+    def asdict(self) -> dict:
+        return {}
+
+    def __len__(self) -> int:
+        return 0
+
+
+NULL_COUNTERS = _NullCounters()
+
+#: Process-wide set of jit-variant keys already dispatched once.
+_VARIANTS_SEEN: set = set()
+
+
+def variant_seen(key) -> bool:
+    """True if ``key`` was dispatched before in this process (a cache hit).
+
+    First call for a key returns False (this call pays tracing +
+    compilation) and marks it seen. Tracked even when telemetry is
+    disabled so hit/miss labels stay truthful across enable/disable
+    boundaries — the underlying ``jax.jit`` cache is process-wide too.
+    """
+    if key in _VARIANTS_SEEN:
+        return True
+    _VARIANTS_SEEN.add(key)
+    return False

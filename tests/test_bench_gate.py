@@ -4,7 +4,11 @@ The gate is a pure function (synthetic report dict in, verdict +
 messages out) precisely so raising it — e.g. to ISSUE 6's
 ``mega >= waves_xla`` — cannot be silently broken by a bench refactor:
 these tests pin the pass/fail semantics, the per-gate messages, and the
-loud failure on structurally broken reports.
+loud failure on structurally broken reports. Since the telemetry gates
+landed, every engine row must also carry a complete ``stage_seconds``
+split and a counter set matching the embedded ``expected_counters``
+plan accounting bit-exactly — missing or inconsistent telemetry fails
+the gate too.
 """
 import json
 import pathlib
@@ -19,13 +23,61 @@ from benchmarks.bench_throughput import (
     check_report,
 )
 
+#: Gate messages: 3 perf gates + telemetry structure + plan counters.
+N_GATES = 5
+
+_WAVES_EXPECT = {
+    "plan.gather_bytes": 960,
+    "plan.bit_block_bytes": 8192,
+    "traffic.hbm_bytes": 100_000,
+}
+_MEGA_EXPECT = {
+    "plan.gather_bytes": 4352,
+    "plan.bit_block_bytes": 8192,
+    "traffic.hbm_bytes": 120_000,
+}
+
+
+def _engine_row(counters=None):
+    return {
+        "seconds_per_call": 0.01,
+        "edges_per_sec": 1e6,
+        "reps": 3,
+        "backend": "cpu",
+        "interpret": True,
+        "stage_seconds": {
+            "schedule": 0.001,
+            "pack": 0.0005,
+            "layout": 0.002,
+            "compile": 0.1,
+            "execute": 0.01,
+        },
+        "telemetry_wall_seconds": 0.2,
+        "counters": dict(counters or {"stream.num_edges": 8192}),
+    }
+
 
 def _graph(scale=10, speedup=9.0, fill=0.7, mega=1.3):
+    engines = {
+        name: _engine_row()
+        for name in ("scan", "pallas_edges", "waves_xla", "rounds")
+    }
+    engines["pallas_waves"] = _engine_row(
+        {"stream.num_edges": 8192, **_WAVES_EXPECT}
+    )
+    engines["pallas_mega"] = _engine_row(
+        {"stream.num_edges": 8192, **_MEGA_EXPECT}
+    )
     return {
         "scale": scale,
         "speedup_pallas_waves_vs_edges": speedup,
         "wave_fill": fill,
         "speedup_mega_vs_xla": mega,
+        "expected_counters": {
+            "pallas_waves": dict(_WAVES_EXPECT),
+            "pallas_mega": dict(_MEGA_EXPECT),
+        },
+        "engines": engines,
     }
 
 
@@ -36,7 +88,7 @@ def _report(graphs):
 def test_all_gates_pass():
     ok, msgs = check_report(_report([_graph(10), _graph(12), _graph(14)]))
     assert ok
-    assert len(msgs) == 3
+    assert len(msgs) == N_GATES
     assert all(m.startswith("PASS") for m in msgs)
 
 
@@ -86,6 +138,69 @@ def test_broken_report_fails_loudly():
     assert any("missing" in m for m in msgs)
 
 
+def test_missing_stage_seconds_fails():
+    """An engine row without its telemetry stage split fails loudly."""
+    g = _graph()
+    del g["engines"]["pallas_mega"]["stage_seconds"]
+    ok, msgs = check_report(_report([g]))
+    assert not ok
+    msg = next(m for m in msgs if "stage_seconds" in m and m.startswith("FAIL"))
+    assert "pallas_mega" in msg
+
+
+def test_missing_stage_key_fails():
+    """All five canonical stage keys are required on every row."""
+    g = _graph()
+    del g["engines"]["rounds"]["stage_seconds"]["compile"]
+    ok, msgs = check_report(_report([g]))
+    assert not ok
+    assert any("compile" in m and "rounds" in m for m in msgs)
+
+
+def test_inconsistent_stage_sum_fails():
+    """Stage sums exceeding the instrumented wall time fail the gate
+    (stages are disjoint subintervals, so the sum can never exceed it)."""
+    g = _graph()
+    g["engines"]["scan"]["stage_seconds"]["execute"] = 10.0
+    ok, msgs = check_report(_report([g]))
+    assert not ok
+    assert any("exceeds wall" in m for m in msgs)
+
+
+def test_empty_counters_fails():
+    g = _graph()
+    g["engines"]["waves_xla"]["counters"] = {}
+    ok, msgs = check_report(_report([g]))
+    assert not ok
+    assert any("no counters" in m and "waves_xla" in m for m in msgs)
+
+
+def test_plan_counter_mismatch_fails_bit_exactly():
+    """A single off-by-one in the emitted gather bytes is a gate failure —
+    the counters must equal the recomputed plan accounting exactly."""
+    g = _graph()
+    g["engines"]["pallas_waves"]["counters"]["plan.gather_bytes"] += 1
+    ok, msgs = check_report(_report([g]))
+    assert not ok
+    assert any(
+        "plan.gather_bytes" in m and "pallas_waves" in m for m in msgs
+    )
+    g2 = _graph()
+    del g2["engines"]["pallas_mega"]["counters"]["traffic.hbm_bytes"]
+    ok, msgs = check_report(_report([g2]))
+    assert not ok
+    assert any("traffic.hbm_bytes" in m and "missing" in m for m in msgs)
+
+
+def test_missing_expected_counters_fails():
+    """A report that stops embedding the plan accounting cannot pass."""
+    g = _graph()
+    del g["expected_counters"]
+    ok, msgs = check_report(_report([g]))
+    assert not ok
+    assert any("expected_counters" in m for m in msgs)
+
+
 def test_check_exits_nonzero_with_message(monkeypatch, capsys):
     """CLI wiring: `--check` on a failing report exits non-zero via
     SystemExit with a message, after printing each gate verdict — no
@@ -116,9 +231,27 @@ def test_check_exits_nonzero_with_message(monkeypatch, capsys):
     assert "PASS" in out and "FAIL" not in out
 
 
+def test_trace_flag_writes_chrome_trace(monkeypatch, capsys, tmp_path):
+    """CLI wiring: `--trace out.json` dumps the session's Chrome trace."""
+    import benchmarks.bench_throughput as bt
+
+    good = _report([_graph(10)])
+    monkeypatch.setattr(
+        bt, "run_report", lambda **kw: ([("row", 1.0, "derived")], good)
+    )
+    out_path = tmp_path / "trace.json"
+    monkeypatch.setattr(
+        sys, "argv", ["bench_throughput", "--no-json", "--trace", str(out_path)]
+    )
+    bt.main()
+    trace = json.loads(out_path.read_text())
+    assert "traceEvents" in trace and isinstance(trace["traceEvents"], list)
+
+
 def test_committed_bench_record_passes_gate():
     """The repo's committed BENCH_substream.json satisfies its own gate
-    (including mega >= waves_xla at every recorded scale)."""
+    (including mega >= waves_xla at every recorded scale AND the
+    telemetry stage/counter gates)."""
     path = pathlib.Path(__file__).resolve().parent.parent / "BENCH_substream.json"
     report = json.loads(path.read_text())
     ok, msgs = check_report(report)

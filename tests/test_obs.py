@@ -1,0 +1,353 @@
+"""Tests for the telemetry subsystem (`repro.obs`).
+
+Three invariant families:
+
+* **tracer/schema** — spans nest by interval containment and the export
+  is valid Chrome trace-event JSON (complete events with μs ts/dur,
+  instant events with scope), so Perfetto opens it;
+* **zero-overhead disabled path** — `obs.DISABLED` hands out the same
+  shared no-op objects by identity and the hot loop neither records nor
+  accumulates allocations;
+* **record consistency** — per-engine stage seconds are disjoint
+  subintervals of the call wall time, the counters are bit-exact copies
+  of the WavePlan / mega_plan / WaveSchedule accounting, and repeated
+  runs produce identical counters (modulo the jit hit/miss labels,
+  which legitimately flip between a cold and a warm call).
+"""
+import json
+import time
+import tracemalloc
+
+import jax
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core import merge, rounds
+from repro.core.matching import mwm_waves
+from repro.core.types import EdgeStream, SubstreamConfig
+from repro.graph.waves import (
+    block_aligned_layout,
+    schedule_counters,
+    wave_schedule,
+)
+from repro.kernels.substream_match.ops import (
+    MEGA_SEG_BLOCK,
+    mega_plan,
+    substream_match,
+    traffic_bytes,
+    wave_plan,
+)
+
+
+def _round_up(x, mult):
+    return ((x + mult - 1) // mult) * mult
+
+
+def _workload(m=600, n=128, L=8, eps=0.1, seed=0):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, m).astype(np.int32)
+    dst = rng.integers(0, n, m).astype(np.int32)
+    w = (rng.random(m) * 10 + 1).astype(np.float32)
+    stream = EdgeStream.from_numpy(src, dst, w)
+    return stream, SubstreamConfig(n=n, L=L, eps=eps)
+
+
+# ---------------------------------------------------------------- tracer
+
+
+def test_spans_nest_by_interval_containment():
+    tel = obs.Telemetry()
+    with tel.span("outer"):
+        with tel.span("inner"):
+            time.sleep(0.001)
+    evs = tel.chrome_trace()["traceEvents"]
+    outer = next(e for e in evs if e["name"] == "outer")
+    inner = next(e for e in evs if e["name"] == "inner")
+    # inner exits first, so its [ts, ts+dur] sits inside outer's
+    assert outer["ts"] <= inner["ts"]
+    assert inner["ts"] + inner["dur"] <= outer["ts"] + outer["dur"]
+    assert inner["dur"] >= 1000  # slept 1ms; ts/dur are microseconds
+
+
+def test_chrome_trace_schema_is_valid():
+    tel = obs.Telemetry()
+    with tel.span("a", detail=1):
+        pass
+    tel.event("mark", backend="cpu")
+    tel.count("some.counter", 3)
+    trace = tel.chrome_trace()
+    # round-trips through JSON (what write_chrome_trace emits)
+    trace = json.loads(json.dumps(trace))
+    assert trace["displayTimeUnit"] == "ms"
+    assert trace["otherData"]["counters"] == {"some.counter": 3}
+    for e in trace["traceEvents"]:
+        assert {"name", "ph", "ts", "pid", "tid"} <= set(e)
+        if e["ph"] == "X":
+            assert e["dur"] >= 0
+        if e["ph"] == "i":
+            assert e["s"] == "t"
+    assert {e["ph"] for e in trace["traceEvents"]} == {"X", "i"}
+
+
+def test_write_chrome_trace_roundtrip(tmp_path):
+    tel = obs.Telemetry()
+    with tel.span("s"):
+        pass
+    path = tmp_path / "trace.json"
+    tel.write_chrome_trace(path)
+    trace = json.loads(path.read_text())
+    assert [e["name"] for e in trace["traceEvents"]] == ["s"]
+
+
+def test_stopwatch_measures_even_when_disabled():
+    with obs.stopwatch(obs.DISABLED, "x") as sw:
+        time.sleep(0.001)
+    assert sw.seconds >= 0.001
+    tel = obs.Telemetry()
+    with obs.stopwatch(tel, "x") as sw2:
+        pass
+    ev = tel.chrome_trace()["traceEvents"][0]
+    assert ev["name"] == "x"
+    assert ev["dur"] == pytest.approx(sw2.seconds * 1e6, rel=1e-9)
+
+
+# ------------------------------------------------------- disabled path
+
+
+def test_disabled_path_is_identity_objects():
+    assert obs.DISABLED.span("a") is obs.NULL_SPAN
+    assert obs.DISABLED.span("b", k=1) is obs.NULL_SPAN
+    assert obs.DISABLED.counters is obs.NULL_COUNTERS
+    assert obs.recorder(obs.DISABLED, "e", 10) is obs.NULL_RECORDER
+    assert obs.recorder(None, "e", 10) is obs.NULL_RECORDER
+    assert obs.DISABLED.match_calls == ()
+    assert obs.DISABLED.events == ()
+    with pytest.raises(RuntimeError):
+        obs.DISABLED.write_chrome_trace("/tmp/nope.json")
+
+
+def test_disabled_hot_loop_does_not_accumulate_allocations():
+    """The no-op path may allocate transient call frames but must not
+    retain anything per iteration (no event lists, no span objects)."""
+    tel = obs.DISABLED
+    rec = obs.recorder(tel, "hot", 1)
+    # warm up any lazy interning before measuring
+    with tel.span("hot"):
+        pass
+    tracemalloc.start()
+    for _ in range(5000):
+        with tel.span("hot"):
+            pass
+        tel.count("hot.counter")
+        with rec.stage("layout"):
+            pass
+        rec.put("gauge", 1)
+    current, peak = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+    # 5000 iterations retaining even one small object each would hold
+    # hundreds of KiB; the no-op path must stay near-zero
+    assert current < 16_384, f"disabled path retained {current} bytes"
+
+
+def test_disabled_engine_results_identical():
+    stream, cfg = _workload()
+    tel = obs.Telemetry()
+    for eng in ("edges", "waves", "mega"):
+        a = substream_match(stream, cfg, schedule=eng, telemetry=tel)
+        b = substream_match(stream, cfg, schedule=eng)
+        np.testing.assert_array_equal(np.asarray(a.assigned), np.asarray(b.assigned))
+
+
+# -------------------------------------------------- record consistency
+
+
+def test_consistency_problems_unit():
+    good = {"schedule": 0.1, "pack": 0.0, "layout": 0.1, "compile": 0.0,
+            "execute": 0.2}
+    assert obs.consistency_problems(good, 0.5) == []
+    probs = obs.consistency_problems({"schedule": 0.1}, 0.5)
+    assert any("missing" in p for p in probs)
+    probs = obs.consistency_problems({**good, "execute": -1.0}, 0.5)
+    assert any("negative" in p for p in probs)
+    probs = obs.consistency_problems(good, 0.1)
+    assert any("exceeds wall" in p for p in probs)
+
+
+@pytest.mark.parametrize("eng", ["edges", "waves", "mega"])
+def test_stage_seconds_within_wall(eng):
+    stream, cfg = _workload(m=500, n=96, L=8, eps=0.12, seed=eng.__hash__() % 7)
+    tel = obs.Telemetry()
+    substream_match(stream, cfg, schedule=eng, telemetry=tel)
+    rec = tel.match_calls[-1]
+    assert rec.engine == f"pallas_{eng}"
+    assert obs.consistency_problems(rec.stage_seconds, rec.wall_seconds) == []
+    assert set(rec.stage_seconds) == set(obs.STAGES)
+
+
+def test_compile_then_execute_labeling():
+    """First dispatch of a jit variant lands in `compile`, repeats in
+    `execute` — tracked process-wide, including disabled warmups."""
+    stream, cfg = _workload(m=333, n=64, L=8, eps=0.17, seed=5)
+    tel = obs.Telemetry()
+    substream_match(stream, cfg, schedule="waves", telemetry=tel)
+    cold = tel.match_calls[-1]
+    substream_match(stream, cfg, schedule="waves", telemetry=tel)
+    warm = tel.match_calls[-1]
+    assert cold.stage_seconds["compile"] > 0 and cold.stage_seconds["execute"] == 0
+    assert warm.stage_seconds["compile"] == 0 and warm.stage_seconds["execute"] > 0
+    assert cold.counters["jit.variant_miss"] == 1
+    assert warm.counters["jit.variant_hit"] == 1
+    # a warmup made with telemetry DISABLED still marks the variant warm
+    stream2, cfg2 = _workload(m=334, n=64, L=8, eps=0.17, seed=6)
+    substream_match(stream2, cfg2, schedule="waves")
+    tel2 = obs.Telemetry()
+    substream_match(stream2, cfg2, schedule="waves", telemetry=tel2)
+    assert tel2.match_calls[-1].stage_seconds["compile"] == 0
+
+
+def test_wave_counters_bit_exact_against_plan():
+    stream, cfg = _workload(m=700, n=160, L=8)
+    src, dst = np.asarray(stream.src), np.asarray(stream.dst)
+    valid = np.asarray(stream.valid)
+    tel = obs.Telemetry()
+    substream_match(stream, cfg, schedule="waves", telemetry=tel)
+    rec = tel.match_calls[-1]
+    sch = wave_schedule(src, dst, valid=valid)
+    plan = wave_plan(cfg.n, cfg.L, sch)
+    assert rec.counters["plan.gather_bytes"] == plan.gather_bytes
+    assert rec.counters["plan.bit_block_bytes"] == plan.nbytes
+    assert rec.counters["plan.seg"] == plan.seg
+    assert rec.counters["plan.block_s"] == plan.block_s
+    for k, v in schedule_counters(sch).items():
+        assert rec.counters[k] == v, k
+    total = _round_up(max(sch.num_segments, 1), plan.block_s) * plan.seg
+    assert rec.counters["traffic.hbm_bytes"] == traffic_bytes(
+        total, sch.num_scheduled, plan.width
+    )
+
+
+def test_mega_counters_bit_exact_against_plan():
+    stream, cfg = _workload(m=700, n=160, L=8)
+    src, dst = np.asarray(stream.src), np.asarray(stream.dst)
+    valid = np.asarray(stream.valid)
+    tel = obs.Telemetry()
+    substream_match(stream, cfg, schedule="mega", telemetry=tel)
+    rec = tel.match_calls[-1]
+    sch = wave_schedule(src, dst, valid=valid)
+    layout = block_aligned_layout(sch, MEGA_SEG_BLOCK)
+    plan = mega_plan(cfg.n, cfg.L, layout)
+    assert rec.counters["plan.gather_bytes"] == plan.gather_bytes
+    assert rec.counters["plan.tile_bytes"] == plan.tile_bytes
+    assert rec.counters["plan.tiles_per_block"] == plan.tiles_per_block
+    assert rec.counters["layout.num_tiles"] == layout.num_tiles
+    assert rec.counters["layout.padding_rows"] == (
+        layout.num_segments - sch.num_segments
+    )
+    bslots = plan.seg_block * plan.seg
+    total = _round_up(max(layout.num_tiles, 1), plan.tiles_per_block) * bslots
+    assert rec.counters["traffic.hbm_bytes"] == traffic_bytes(
+        total, sch.num_scheduled, plan.width
+    )
+
+
+def test_counters_deterministic_across_runs():
+    """Re-running the same call yields identical counters, except the
+    jit hit/miss labels (cold vs warm is real state, not noise)."""
+    stream, cfg = _workload(m=450, n=96, L=8)
+
+    def counters_of(eng):
+        tel = obs.Telemetry()
+        substream_match(stream, cfg, schedule=eng, telemetry=tel)
+        return {
+            k: v
+            for k, v in tel.match_calls[-1].counters.items()
+            if not k.startswith("jit.")
+        }
+
+    for eng in ("edges", "waves", "mega"):
+        first = counters_of(eng)
+        second = counters_of(eng)
+        assert first == second
+        assert first  # non-empty
+
+
+def test_backend_event_per_call():
+    """`resolve_interpret`'s auto flip is no longer silent: every
+    substream_match call emits one structured backend event."""
+    stream, cfg = _workload(m=200, n=64, L=8)
+    tel = obs.Telemetry()
+    substream_match(stream, cfg, schedule="edges", telemetry=tel)
+    substream_match(stream, cfg, schedule="mega", telemetry=tel)
+    evs = [e for e in tel.events if e["name"] == "substream_match.backend"]
+    assert len(evs) == 2
+    assert [e["engine"] for e in evs] == ["edges", "mega"]
+    for e in evs:
+        assert e["backend"] == jax.default_backend()
+        assert isinstance(e["interpret"], bool)
+        # on anything but a real TPU the auto policy interprets
+        if e["backend"] != "tpu":
+            assert e["interpret"] is True
+
+
+def test_schedule_seconds_one_timing_path():
+    """The deprecated WaveSchedule fields and the telemetry spans are
+    views of the same stopwatch measurement — not two timers."""
+    stream, _ = _workload(m=800, n=128, L=8)
+    tel = obs.Telemetry()
+    sch = wave_schedule(
+        np.asarray(stream.src),
+        np.asarray(stream.dst),
+        valid=np.asarray(stream.valid),
+        telemetry=tel,
+    )
+    evs = tel.chrome_trace()["traceEvents"]
+    assign = next(e for e in evs if e["name"] == "wave_schedule.assign")
+    pack = next(e for e in evs if e["name"] == "wave_schedule.pack")
+    assert assign["dur"] == pytest.approx(sch.schedule_seconds * 1e6, rel=1e-9)
+    assert pack["dur"] == pytest.approx(sch.pack_seconds * 1e6, rel=1e-9)
+    # and the schedule geometry landed in the session counters
+    assert tel.counters.get("schedule.num_waves") == sch.num_waves
+    assert tel.counters.get("schedule.fill") == sch.fill
+
+
+def test_roofline_fraction_sane():
+    stream, cfg = _workload(m=600, n=128, L=8)
+    tel = obs.Telemetry()
+    substream_match(stream, cfg, schedule="mega", telemetry=tel)
+    terms = tel.match_calls[-1].roofline()
+    assert terms["bound_edges_per_s"] > 0
+    assert terms["bytes_per_edge"] > 0
+    assert 0 < terms["achieved_fraction"] < 1  # interpret mode is slow
+    assert terms["dominant"] in ("pipeline", "memory")
+
+
+def test_xla_engines_and_merge_record():
+    stream, cfg = _workload(m=400, n=96, L=8)
+    tel = obs.Telemetry()
+    res = mwm_waves(stream, cfg, telemetry=tel)
+    assert tel.match_calls[-1].engine == "waves_xla"
+    rounds.mwm_rounds(stream, cfg, telemetry=tel)
+    assert tel.match_calls[-1].engine == "rounds"
+    for rec in tel.match_calls:
+        assert obs.consistency_problems(rec.stage_seconds, rec.wall_seconds) == []
+    t = merge.merge_host(stream, res, cfg, telemetry=tel)
+    assert tel.counters.get("merge.recorded_edges") == int(
+        (np.asarray(res.assigned) >= 0).sum()
+    )
+    assert tel.counters.get("merge.matched_edges") == len(t)
+    names = {e["name"] for e in tel.chrome_trace()["traceEvents"]}
+    assert "merge.host" in names
+    merge.merge_device(stream, res, cfg, telemetry=tel)
+    assert "merge.device" in {e["name"] for e in tel.chrome_trace()["traceEvents"]}
+
+
+def test_match_telemetry_asdict_json_ready():
+    stream, cfg = _workload(m=300, n=64, L=8)
+    tel = obs.Telemetry()
+    substream_match(stream, cfg, schedule="waves", telemetry=tel)
+    d = tel.match_calls[-1].asdict()
+    json.dumps(d)  # must serialize
+    assert list(d["stage_seconds"]) == list(obs.STAGES)
+    assert d["edges_per_sec"] > 0
+    assert d["engine"] == "pallas_waves"
