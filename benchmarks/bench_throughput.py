@@ -23,7 +23,12 @@ schedule/pack/layout/compile/execute — and the plan/schedule
 steady call around the disabled-telemetry timed reps; ``--trace out.json``
 dumps those instrumented calls as Chrome trace-event JSON for Perfetto.
 ``--check`` runs :func:`check_report` over the record and exits non-zero
-with the violated gates named — never an assert, so CI logs the reason. The wave
+with the violated gates named — never an assert, so CI logs the reason.
+The Pallas engines run with ``on_plan_failure="fallback"`` (the guarded
+production configuration); each graph also embeds a strict
+``validate_stream`` guard record, and the gate requires zero validation
+drops and ``fallback.count == 0`` on every Pallas row, so a benchmark
+number can never secretly come from a degraded engine. The wave
 schedule is built once per graph on the host and its cost reported
 separately (it is reusable across L/eps sweeps and engine runs, like the
 §4.2 lexicographic pre-sort the paper already assumes); the mega engine
@@ -47,7 +52,7 @@ import numpy as np
 
 from benchmarks.common import make_workload, timed
 from repro import obs
-from repro.core import mwm_rounds, mwm_scan
+from repro.core import mwm_rounds, mwm_scan, validate_stream
 from repro.core.matching import mwm_waves
 from repro.graph.waves import block_aligned_layout, wave_schedule
 from repro.kernels.substream_match.ops import (
@@ -137,6 +142,12 @@ def _bench_graph(
     stream, cfg = make_workload(scale, edge_factor, L, eps)
     m = stream.num_edges
 
+    # clean-path guard record: the bench workload must validate strictly
+    # (a raise here means the generator regressed), and the report embeds
+    # the guard counters so the gate can pin "no drops, no degradation"
+    _, vreport = validate_stream(stream, cfg.n, policy="strict", telemetry=telemetry)
+    validation = {"policy": vreport.policy, **vreport.counters()}
+
     schedule = wave_schedule(
         np.asarray(stream.src),
         np.asarray(stream.dst),
@@ -147,13 +158,16 @@ def _bench_graph(
     engines = {
         "scan": lambda tel=obs.DISABLED: _instrumented_scan(stream, cfg, tel),
         "pallas_edges": lambda tel=obs.DISABLED: substream_match(
-            stream, cfg, schedule="edges", telemetry=tel
+            stream, cfg, schedule="edges", telemetry=tel,
+            on_plan_failure="fallback",
         ),
         "pallas_waves": lambda tel=obs.DISABLED: substream_match(
-            stream, cfg, schedule="waves", waves=schedule, telemetry=tel
+            stream, cfg, schedule="waves", waves=schedule, telemetry=tel,
+            on_plan_failure="fallback",
         ),
         "pallas_mega": lambda tel=obs.DISABLED: substream_match(
-            stream, cfg, schedule="mega", waves=schedule, telemetry=tel
+            stream, cfg, schedule="mega", waves=schedule, telemetry=tel,
+            on_plan_failure="fallback",
         ),
         "waves_xla": lambda tel=obs.DISABLED: mwm_waves(
             stream, cfg, schedule=schedule, telemetry=tel
@@ -225,6 +239,7 @@ def _bench_graph(
         "edges_per_wave": round(m / max(schedule.num_waves, 1), 1),
         "schedule_seconds": schedule.schedule_seconds,
         "pack_seconds": schedule.pack_seconds,
+        "validation": validation,
         "expected_counters": _expected_counters(schedule, cfg, L),
         "engines": timings,
         "speedup_pallas_waves_vs_edges": round(speedup, 2),
@@ -331,7 +346,13 @@ def check_report(report: dict) -> tuple[bool, list[str]]:
       fails here instead of silently un-observing the bench;
     * the wave/mega counters reproduce the plan accounting embedded in
       ``expected_counters`` **bit-exactly** (gather bytes, bit-block
-      bytes, modeled HBM traffic).
+      bytes, modeled HBM traffic);
+    * the clean-path guard: every graph embeds a ``validation`` block
+      with zero dropped edges / zero problems, and every Pallas engine
+      row carries ``fallback.count == 0`` — the bench numbers must come
+      from the engine they are labeled with, never from a silent
+      fallback degradation, and a report without the guard record
+      fails rather than passing vacuously.
     """
     msgs: list[str] = []
     graphs = report.get("graphs")
@@ -415,6 +436,42 @@ def check_report(report: dict) -> tuple[bool, list[str]]:
         f"(gather/bit-block/traffic bytes bit-exact)"
         + ("" if verdict else ": " + "; ".join(mismatches))
     )
+
+    # clean-path guard: the bench input validated clean and no Pallas
+    # engine silently degraded down the fallback cascade
+    guard_problems: list[str] = []
+    for g in graphs:
+        scale = g.get("scale", "?")
+        v = g.get("validation")
+        if not v:
+            guard_problems.append(f"scale {scale}: no validation block")
+        else:
+            for key in ("guard.dropped_edges", "guard.num_problems"):
+                if v.get(key) != 0:
+                    guard_problems.append(
+                        f"scale {scale}: {key} = {v.get(key, 'missing')} "
+                        f"on the clean bench path"
+                    )
+        for name, row in g.get("engines", {}).items():
+            if not name.startswith("pallas_"):
+                continue
+            fb = row.get("counters", {}).get("fallback.count")
+            if fb is None:
+                guard_problems.append(
+                    f"scale {scale} engine {name}: no fallback.count counter"
+                )
+            elif fb != 0:
+                guard_problems.append(
+                    f"scale {scale} engine {name}: fallback.count = {fb} "
+                    f"(engine silently degraded)"
+                )
+    verdict = not guard_problems
+    ok = ok and verdict
+    msgs.append(
+        f"{'PASS' if verdict else 'FAIL'} clean-path guard "
+        f"(validation clean, fallback.count == 0 on every Pallas row)"
+        + ("" if verdict else ": " + "; ".join(guard_problems))
+    )
     return ok, msgs
 
 
@@ -431,7 +488,8 @@ def main() -> None:
         action="store_true",
         help="exit non-zero unless on every benched graph wave_fill >= "
         "%.2f, wave-vs-edge speedup >= %.1f, mega >= %.1fx waves_xla, "
-        "and every engine row carries consistent telemetry"
+        "every engine row carries consistent telemetry, the input "
+        "validated clean, and no Pallas engine fell back"
         % (TARGET_FILL, TARGET_SPEEDUP, TARGET_MEGA_VS_XLA),
     )
     ap.add_argument(

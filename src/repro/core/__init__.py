@@ -10,6 +10,8 @@ Public API:
   gseq                  — Ghaffari (2+eps) baseline (G-SEQ)
   exact_mwm_weight      — networkx oracle (tests/benchmarks)
   mwm_pipeline          — end-to-end: Part 1 + Part 2 → matching + weight
+  validate_stream / check_matching — input guard + result invariants
+                          (strict / sanitize / off policies, repro.core.guard)
 """
 from __future__ import annotations
 
@@ -21,6 +23,15 @@ from repro.core.types import (
     MatchingResult,
     SubstreamConfig,
     eligibility,
+)
+from repro.core.guard import (
+    MatchingInvariantError,
+    StreamValidationError,
+    ValidationReport,
+    check_matching,
+    matching_problems,
+    stream_problems,
+    validate_stream,
 )
 from repro.core.matching import mwm_scan, mwm_waves, substream_matchings
 from repro.core.blocked import mwm_blocked, lexicographic_order, permute_stream
@@ -65,6 +76,13 @@ __all__ = [
     "pack_bits",
     "packed_width",
     "unpack_bits",
+    "validate_stream",
+    "stream_problems",
+    "check_matching",
+    "matching_problems",
+    "StreamValidationError",
+    "MatchingInvariantError",
+    "ValidationReport",
     "mwm_scan",
     "mwm_waves",
     "substream_matchings",

@@ -34,6 +34,14 @@ def mwm_scan(stream: EdgeStream, cfg: SubstreamConfig) -> MatchingResult:
                  collapses to "highest i" because the descending loop in
                  Listing 1 records the first i where the edge is added)
     """
+    if cfg.n == 0:
+        # scan traces its body even for zero iterations of work per edge,
+        # and mb[u] on a zero-row block is an out-of-bounds gather — return
+        # the well-formed empty result instead
+        return MatchingResult(
+            assigned=jnp.full((stream.num_edges,), -1, jnp.int32),
+            mb=jnp.zeros((0, cfg.L), dtype=bool),
+        )
     thr = cfg.thresholds()
 
     def step(mb, e):
@@ -66,6 +74,8 @@ def substream_matchings(stream: EdgeStream, cfg: SubstreamConfig) -> jax.Array:
     list C_i — an edge can be matched in several substreams but recorded in
     one (Listing 1's ``has_added``). Some invariant tests need the full M_i.
     """
+    if cfg.n == 0:
+        return jnp.zeros((stream.num_edges, cfg.L), dtype=bool)
     thr = cfg.thresholds()
 
     def step(mb, e):
@@ -141,6 +151,11 @@ def mwm_waves(
     itself is jitted. ``telemetry`` records the same stage split as the
     Pallas engines (engine name ``waves_xla``).
     """
+    if cfg.n == 0:
+        return MatchingResult(
+            assigned=jnp.full((stream.num_edges,), -1, jnp.int32),
+            mb=jnp.zeros((0, cfg.L), dtype=bool),
+        )
     from repro.graph import waves as _waves
 
     rec = obs.recorder(

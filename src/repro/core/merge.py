@@ -42,6 +42,14 @@ def merge_host(
         dst = np.asarray(stream.dst)
         assigned = np.asarray(result.assigned)
         recorded = np.nonzero(assigned >= 0)[0]
+        if recorded.size == 0:
+            # empty / all-dropped streams: a well-formed empty T, skipping
+            # the n-sized tbits allocation (n may be 0 here)
+            if telemetry.enabled:
+                telemetry.counters.add("merge.host.calls")
+                telemetry.counters.put("merge.recorded_edges", 0)
+                telemetry.counters.put("merge.matched_edges", 0)
+            return np.zeros(0, dtype=np.int64)
         # descending i, stream order within i: stable sort on the major key
         # alone (``recorded`` is already ascending in stream position)
         order = recorded[np.argsort(cfg.L - 1 - assigned[recorded], kind="stable")]
@@ -99,5 +107,10 @@ def merge_device(
 
 
 def matching_weight(stream: EdgeStream, edge_idx: np.ndarray) -> float:
+    # the int64 cast keeps empty python lists indexable (np.asarray([])
+    # is float64, which cannot index)
+    idx = np.asarray(edge_idx, dtype=np.int64)
+    if idx.size == 0:
+        return 0.0
     w = np.asarray(stream.weight)
-    return float(w[np.asarray(edge_idx)].sum())
+    return float(w[idx].sum())

@@ -17,6 +17,28 @@ import numpy as np
 
 from repro.core import bitpack
 
+_I32 = np.iinfo(np.int32)
+
+
+def _int32_cast_faults(a: np.ndarray) -> np.ndarray:
+    """bool mask: True where ``a.astype(np.int32)`` would change the value."""
+    if a.dtype == np.int32 or a.dtype == bool:
+        return np.zeros(a.shape, bool)
+    if np.issubdtype(a.dtype, np.integer):
+        return (a < _I32.min) | (a > _I32.max)
+    if np.issubdtype(a.dtype, np.floating):
+        with np.errstate(invalid="ignore"):
+            bad = ~np.isfinite(a) | (a < _I32.min) | (a > _I32.max)
+            frac = np.zeros(a.shape, bool)
+            ok = ~bad
+            frac[ok] = a[ok] != np.trunc(a[ok])
+        return bad | frac
+    try:  # exotic dtypes (object arrays of python ints): round-trip via int64
+        a64 = a.astype(np.int64)
+    except (TypeError, ValueError, OverflowError):
+        return np.ones(a.shape, bool)
+    return (a64 < _I32.min) | (a64 > _I32.max)
+
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
@@ -37,21 +59,75 @@ class EdgeStream:
         return self.src.shape[0]
 
     @staticmethod
-    def from_numpy(src, dst, weight, n_pad: Optional[int] = None) -> "EdgeStream":
-        src = np.asarray(src, np.int32)
-        dst = np.asarray(dst, np.int32)
-        weight = np.asarray(weight, np.float32)
-        m = src.shape[0]
+    def from_numpy(
+        src, dst, weight, n_pad: Optional[int] = None, policy: str = "strict"
+    ) -> "EdgeStream":
+        """Build a stream from host arrays, guarding the narrowing casts.
+
+        The int32/float32 casts can silently destroy data: an int64
+        vertex id wraps modulo 2^32, a float64 weight overflows to Inf.
+        ``policy`` controls what happens to entries the casts cannot
+        represent (ids outside int32, weights non-finite after the
+        float32 cast):
+
+        * ``"strict"`` (default) — raise a structured
+          :class:`repro.core.guard.StreamValidationError` naming the
+          offending positions;
+        * ``"sanitize"`` — drop those edges (``valid=False``, slots
+          zeroed like padding);
+        * ``"off"`` — the legacy wrap/NaN-propagate cast, for callers
+          that have already validated.
+
+        Range checks against ``n`` (ids in ``[0, n)``, negative/NaN
+        weights) are :func:`repro.core.guard.validate_stream`'s job —
+        this only guards representability of the casts themselves.
+        """
+        if policy not in ("strict", "sanitize", "off"):
+            raise ValueError(
+                f"unknown policy {policy!r}; use 'strict', 'sanitize' or 'off'"
+            )
+        src_in = np.asarray(src)
+        dst_in = np.asarray(dst)
+        w_in = np.asarray(weight)
+        m = src_in.shape[0]
+        if dst_in.shape[0] != m or w_in.shape[0] != m:
+            raise ValueError(
+                f"src/dst/weight lengths differ: "
+                f"{m}/{dst_in.shape[0]}/{w_in.shape[0]}"
+            )
+        drop = np.zeros(m, bool)
+        if policy != "off" and m:
+            from repro.core import guard  # deferred: guard imports this module
+
+            bad_id = _int32_cast_faults(src_in) | _int32_cast_faults(dst_in)
+            with np.errstate(invalid="ignore", over="ignore"):
+                bad_w = ~np.isfinite(w_in.astype(np.float32))
+            problems = [
+                guard._problem(kind, mask, detail=detail)
+                for kind, mask, detail in (
+                    ("id_overflow", bad_id, "vertex id not representable as int32"),
+                    ("nonfinite_weight", bad_w, "weight non-finite after the float32 cast"),
+                )
+                if mask.any()
+            ]
+            if problems:
+                if policy == "strict":
+                    raise guard.StreamValidationError(problems)
+                drop = bad_id | bad_w
+        with np.errstate(invalid="ignore", over="ignore"):
+            src_np = np.where(drop, 0, src_in).astype(np.int32)
+            dst_np = np.where(drop, 0, dst_in).astype(np.int32)
+            w_np = np.where(drop, 0.0, w_in).astype(np.float32)
         m_pad = m if n_pad is None else n_pad
         if m_pad < m:
             raise ValueError(f"pad {m_pad} < m {m}")
         pad = m_pad - m
-        valid = np.concatenate([np.ones(m, bool), np.zeros(pad, bool)])
+        valid = np.concatenate([~drop, np.zeros(pad, bool)])
         z = np.zeros(pad, np.int32)
         return EdgeStream(
-            src=jnp.asarray(np.concatenate([src, z])),
-            dst=jnp.asarray(np.concatenate([dst, z])),
-            weight=jnp.asarray(np.concatenate([weight, np.zeros(pad, np.float32)])),
+            src=jnp.asarray(np.concatenate([src_np, z])),
+            dst=jnp.asarray(np.concatenate([dst_np, z])),
+            weight=jnp.asarray(np.concatenate([w_np, np.zeros(pad, np.float32)])),
             valid=jnp.asarray(valid),
         )
 

@@ -405,6 +405,17 @@ def validate_schedule(schedule: WaveSchedule, src, dst, valid=None) -> None:
         )
     if order.size == 0:
         return
+    # order must be in-range and duplicate-free BEFORE it is used to
+    # index the stream: a negative entry would silently wrap through
+    # numpy indexing (src[-5] is a real edge) and corrupt the gather
+    # with no error — the exact failure mode this check exists to stop
+    if order.min() < 0 or order.max() >= m or np.unique(order).size != order.size:
+        raise ValueError(
+            "wave schedule order is not a permutation of edge indices "
+            "(out-of-range or duplicate entries; corrupted or "
+            "hand-built schedule); rebuild it with wave_schedule on "
+            "the current stream"
+        )
     # per-wave disjointness: sort (wave, vertex) pairs over both
     # endpoints (self-loops contribute one), adjacent duplicates are
     # conflicts. Checked over the full wave, not just segment rows —

@@ -397,6 +397,184 @@ def _thresholds_padded(cfg: SubstreamConfig, width: int, packed: bool) -> jax.Ar
     return jnp.full((1, width), jnp.inf, jnp.float32).at[0, : cfg.L].set(thr)
 
 
+class FallbackExhaustedError(RuntimeError):
+    """Every engine in the fallback cascade failed.
+
+    ``attempts`` is the ordered ``(engine_label, exception)`` list, so a
+    service log shows the whole degradation path in one line.
+    """
+
+    def __init__(self, attempts):
+        self.attempts = tuple(attempts)
+        lines = "; ".join(
+            f"{label}: {type(err).__name__}: {err}" for label, err in self.attempts
+        )
+        super().__init__(f"all fallback engines failed ({lines})")
+
+
+def _empty_result(stream: EdgeStream, cfg: SubstreamConfig, packed: bool):
+    """Well-formed nothing-matched result (n == 0 vertex spaces)."""
+    assigned = jnp.full((stream.num_edges,), -1, jnp.int32)
+    if packed:
+        words = bitpack.packed_width(max(cfg.L, 1))
+        return MatchingResult(
+            assigned=assigned,
+            mb_packed=jnp.zeros((0, words), jnp.uint8),
+            L=cfg.L,
+        )
+    return MatchingResult(assigned=assigned, mb=jnp.zeros((0, cfg.L), bool))
+
+
+def _repack(result: MatchingResult, packed: bool) -> MatchingResult:
+    """Convert a dense XLA-fallback result to the storage the caller asked
+    for, so cascade consumers see the same ``is_packed`` contract as the
+    Pallas engines (`mb`/`assigned` are bit-identical either way)."""
+    if packed and not result.is_packed:
+        return MatchingResult(
+            assigned=result.assigned,
+            mb_packed=bitpack.pack_bits(result.mb),
+            L=result.L,
+        )
+    return result
+
+
+def _run_engine(
+    engine: str,
+    stream: EdgeStream,
+    cfg: SubstreamConfig,
+    *,
+    block_e,
+    interpret,
+    packed,
+    waves,
+    max_width,
+    seg_block,
+    block_s,
+    telemetry,
+) -> MatchingResult:
+    """Dispatch one concrete engine of the cascade. The XLA fallbacks are
+    looked up through the module at call time (not from-imported), so the
+    fault injector can force them to fail too."""
+    if engine == "mega":
+        return _substream_match_mega(
+            stream, cfg, interpret=interpret, packed=packed, waves=waves,
+            max_width=max_width, seg_block=seg_block, telemetry=telemetry,
+        )
+    if engine == "waves":
+        return _substream_match_waves(
+            stream, cfg, interpret=interpret, packed=packed, waves=waves,
+            max_width=max_width, block_s=block_s, telemetry=telemetry,
+        )
+    if engine == "edges":
+        return _edges_entry(
+            stream, cfg, block_e=block_e, interpret=interpret, packed=packed,
+            telemetry=telemetry,
+        )
+    from repro.core import matching as _matching
+
+    if engine == "waves_xla":
+        return _repack(
+            _matching.mwm_waves(
+                stream, cfg, schedule=waves, max_width=max_width,
+                telemetry=telemetry,
+            ),
+            packed,
+        )
+    if engine == "scan":
+        return _repack(_matching.mwm_scan(stream, cfg), packed)
+    raise ValueError(f"unknown engine {engine!r}")
+
+
+def _fallback_attempts(schedule: str, seg_block, block_s):
+    """The ordered degradation ladder for ``on_plan_failure="fallback"``:
+    shrink the failing engine's tile knob first (smaller VMEM working
+    set), then step down mega -> waves -> waves_xla -> scan. Each entry
+    is ``(engine, {knob overrides}, label)``."""
+    shrink_waves = [("waves", {"block_s": block_s}, "waves")]
+    if block_s != 1:
+        shrink_waves.append(("waves", {"block_s": 1}, "waves[block_s=1]"))
+    xla = [("waves_xla", {}, "waves_xla"), ("scan", {}, "scan")]
+    if schedule == "mega":
+        attempts = [("mega", {"seg_block": seg_block}, "mega")]
+        if (MEGA_SEG_BLOCK if seg_block is None else seg_block) != 1:
+            attempts.append(("mega", {"seg_block": 1}, "mega[seg_block=1]"))
+        return attempts + shrink_waves + xla
+    if schedule == "waves":
+        return shrink_waves + xla
+    return [("edges", {}, "edges")] + xla
+
+
+def _substream_match_fallback(
+    stream: EdgeStream,
+    cfg: SubstreamConfig,
+    *,
+    block_e,
+    interpret,
+    packed,
+    schedule,
+    waves,
+    max_width,
+    seg_block,
+    block_s,
+    telemetry,
+) -> MatchingResult:
+    """The fallback cascade resolver (``on_plan_failure="fallback"``).
+
+    Runs the :func:`_fallback_attempts` ladder until an engine returns a
+    result. Every failure is observable: a ``fallback`` instant event
+    (from_engine, to_engine, reason) plus the ``fallback.count`` session
+    counter, and each degraded attempt runs inside a ``fallback`` span.
+    The per-call :class:`repro.obs.MatchTelemetry` record of the engine
+    that finally succeeded carries ``fallback.count`` (0 on the clean
+    path — the bench gate pins that). Validation and invariant errors
+    are *not* absorbed: a bad stream fails every engine identically, so
+    retrying would only mask the caller's bug.
+    """
+    from repro.core import guard as _guard
+
+    attempts = _fallback_attempts(schedule, seg_block, block_s)
+    failures = []
+    for idx, (engine, overrides, label) in enumerate(attempts):
+        kw = {"seg_block": seg_block, "block_s": block_s}
+        kw.update(overrides)
+        ncalls = len(telemetry.match_calls)
+        span = (
+            telemetry.span("fallback", engine=label, attempt=idx)
+            if failures
+            else obs.NULL_SPAN
+        )
+        try:
+            with span:
+                out = _run_engine(
+                    engine, stream, cfg, block_e=block_e, interpret=interpret,
+                    packed=packed, waves=waves, max_width=max_width,
+                    seg_block=kw["seg_block"], block_s=kw["block_s"],
+                    telemetry=telemetry,
+                )
+        except (_guard.StreamValidationError, _guard.MatchingInvariantError):
+            raise
+        except Exception as err:  # noqa: BLE001 — availability cascade
+            failures.append((label, err))
+            if telemetry.enabled:
+                nxt = attempts[idx + 1][2] if idx + 1 < len(attempts) else None
+                telemetry.event(
+                    "fallback",
+                    from_engine=label,
+                    to_engine=nxt,
+                    reason=f"{type(err).__name__}: {err}"[:500],
+                )
+                telemetry.counters.add("fallback.count")
+            if idx + 1 == len(attempts):
+                raise FallbackExhaustedError(failures) from err
+            continue
+        if telemetry.enabled and len(telemetry.match_calls) > ncalls:
+            # stamp the degradation depth onto the per-call record of the
+            # engine that actually produced the result (0 = clean path)
+            telemetry.match_calls[-1].counters["fallback.count"] = len(failures)
+        return out
+    raise FallbackExhaustedError(failures)
+
+
 def substream_match(
     stream: EdgeStream,
     cfg: SubstreamConfig,
@@ -407,7 +585,10 @@ def substream_match(
     waves=None,
     max_width: int | None = None,
     seg_block: int | None = None,
+    block_s: int | None = None,
     telemetry=obs.DISABLED,
+    on_plan_failure: str = "raise",
+    validate: str = "off",
 ) -> MatchingResult:
     """Run Part 1 on the given stream order via the Pallas kernel.
 
@@ -444,17 +625,52 @@ def substream_match(
     and a per-call :class:`repro.obs.MatchTelemetry` appended to
     ``telemetry.match_calls``.
 
-    Raises if the bit block exceeds the VMEM budget — at that size the
-    caller must vertex-partition (core.rounds) instead.
+    ``validate`` is the input-guard policy (``"off"`` default — zero
+    overhead for trusted paths; ``"strict"`` raises on malformed
+    streams, ``"sanitize"`` drops bad edges and reports via counters —
+    see :func:`repro.core.guard.validate_stream`).
+
+    ``on_plan_failure`` picks what happens when a plan exceeds VMEM or
+    the Pallas path fails: ``"raise"`` (default, today's behavior)
+    propagates; ``"fallback"`` degrades through the cascade — shrunk
+    ``seg_block``/``block_s`` first, then mega -> waves -> ``waves_xla``
+    -> the scan oracle — emitting ``fallback`` spans/events/counters so
+    the degradation is observable, never silent. ``block_s`` caps the
+    wave path's segments-per-program (``None`` = the plan's auto pick).
+
+    With ``on_plan_failure="raise"``, raises if the bit block exceeds
+    the VMEM budget — at that size the caller must vertex-partition
+    (core.rounds) instead.
     """
+    if validate != "off":
+        from repro.core import guard as _guard
+
+        stream, _ = _guard.validate_stream(
+            stream, cfg.n, policy=validate, telemetry=telemetry
+        )
     interpret = resolve_interpret(interpret)
     packed = _resolve_packed(cfg, packed)
+    if schedule not in ("edges", "waves", "mega"):
+        raise ValueError(f"unknown schedule {schedule!r}")
+    if on_plan_failure not in ("raise", "fallback"):
+        raise ValueError(
+            f"unknown on_plan_failure {on_plan_failure!r}; "
+            f"use 'raise' or 'fallback'"
+        )
     if telemetry.enabled:
         telemetry.event(
             "substream_match.backend",
             engine=schedule,
             backend=jax.default_backend(),
             interpret=bool(interpret),
+        )
+    if cfg.n == 0:
+        return _empty_result(stream, cfg, packed)
+    if on_plan_failure == "fallback":
+        return _substream_match_fallback(
+            stream, cfg, block_e=block_e, interpret=interpret, packed=packed,
+            schedule=schedule, waves=waves, max_width=max_width,
+            seg_block=seg_block, block_s=block_s, telemetry=telemetry,
         )
     if schedule == "edges":
         return _edges_entry(
@@ -464,10 +680,9 @@ def substream_match(
     if schedule == "waves":
         return _substream_match_waves(
             stream, cfg, interpret=interpret, packed=packed,
-            waves=waves, max_width=max_width, telemetry=telemetry,
+            waves=waves, max_width=max_width, block_s=block_s,
+            telemetry=telemetry,
         )
-    if schedule != "mega":
-        raise ValueError(f"unknown schedule {schedule!r}")
     return _substream_match_mega(
         stream, cfg, interpret=interpret, packed=packed,
         waves=waves, max_width=max_width, seg_block=seg_block,
@@ -588,6 +803,7 @@ def _substream_match_waves(
     packed: bool,
     waves=None,
     max_width: int | None = None,
+    block_s: int | None = None,
     telemetry=obs.DISABLED,
 ) -> MatchingResult:
     from repro.graph import waves as _waves
@@ -614,7 +830,7 @@ def _substream_match_waves(
                 src, dst, valid, schedule=waves, max_width=max_width,
                 telemetry=telemetry,
             )
-    plan = wave_plan(cfg.n, cfg.L, waves, packed=packed)
+    plan = wave_plan(cfg.n, cfg.L, waves, packed=packed, block_s=block_s)
     if plan.nbytes > VMEM_BIT_BUDGET:
         raise ValueError(
             f"matching-bit block {plan.nbytes/2**20:.1f} MiB > VMEM budget; "

@@ -1,0 +1,262 @@
+"""Deterministic fault injection for the guarded matching pipeline.
+
+Test-only machinery (used by ``tests/test_faults.py``) that manufactures
+the failure modes the guard layer (:mod:`repro.core.guard`) and the
+fallback cascade (``substream_match(..., on_plan_failure="fallback")``)
+claim to handle:
+
+* **input faults** — :func:`poison_ids` / :func:`poison_weights` plant
+  out-of-range ids (including the sacrificial padding row ``n_pad``) and
+  NaN/Inf/negative weights at chosen stream positions;
+* **result corruptions** — :func:`corrupt_assigned` rewrites ``assigned``
+  entries, :func:`flip_matching_bit` flips one bit of the (packed or
+  dense) bit-plane block;
+* **schedule faults** — :func:`truncate_schedule` / :func:`permute_schedule`
+  produce the stale/corrupted precomputed schedules
+  ``repro.graph.waves.validate_schedule`` exists to reject;
+* **plan / compile faults** — :func:`failing` monkey-patches the named
+  ``ops`` internals (planners or jitted device entries) to raise, forcing
+  the cascade to degrade.
+
+Everything is pure and deterministic: no RNG, no wall clock — the same
+call always injects the same fault, so a failing test replays exactly.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitpack
+from repro.core.types import EdgeStream, MatchingResult
+
+
+@dataclasses.dataclass(frozen=True)
+class InjectedFault:
+    """What was planted: the guard taxonomy ``kind`` expected to flag it,
+    the stream positions touched, and a human-readable description."""
+
+    kind: str
+    positions: tuple
+    description: str
+
+
+def _replace(stream: EdgeStream, **arrays) -> EdgeStream:
+    fields = {
+        "src": np.asarray(stream.src).copy(),
+        "dst": np.asarray(stream.dst).copy(),
+        "weight": np.asarray(stream.weight).copy(),
+        "valid": np.asarray(stream.valid).copy(),
+    }
+    fields.update(arrays)
+    return EdgeStream(**{k: jnp.asarray(v) for k, v in fields.items()})
+
+
+def sacrificial_row(n: int) -> int:
+    """The padding row id the row-addressed kernels scatter padding slots
+    to (``vmem_plan``'s ``n_pad``) — an id a dirty input could collide
+    with. Mirrors ``ops.vmem_plan``'s rounding so the injector does not
+    import the module it is used to break."""
+    return ((max(n, 1) + 7) // 8) * 8
+
+
+def poison_ids(
+    stream: EdgeStream, n: int, positions, mode: str = "past_n"
+) -> tuple[EdgeStream, InjectedFault]:
+    """Plant out-of-range vertex ids at the given stream positions.
+
+    ``mode``: ``"past_n"`` (id = n, the first row XLA silently clamps),
+    ``"sacrificial"`` (id = the kernels' padding row ``n_pad``),
+    ``"negative"`` (id = -1), ``"int_max"`` (id = 2**31 - 1).
+    """
+    values = {
+        "past_n": n,
+        "sacrificial": sacrificial_row(n),
+        "negative": -1,
+        "int_max": np.iinfo(np.int32).max,
+    }
+    if mode not in values:
+        raise ValueError(f"unknown mode {mode!r}; use one of {sorted(values)}")
+    pos = tuple(int(p) for p in positions)
+    src = np.asarray(stream.src).copy()
+    src[list(pos)] = np.int32(values[mode])
+    return (
+        _replace(stream, src=src),
+        InjectedFault(
+            kind="id_out_of_range",
+            positions=pos,
+            description=f"src id -> {values[mode]} ({mode}) at {list(pos)}",
+        ),
+    )
+
+
+def poison_weights(
+    stream: EdgeStream, positions, mode: str = "nan"
+) -> tuple[EdgeStream, InjectedFault]:
+    """Plant dirty weights: ``"nan"``, ``"posinf"``, ``"neginf"``, or
+    ``"negative"`` (finite w = -1.5)."""
+    values = {
+        "nan": np.nan,
+        "posinf": np.inf,
+        "neginf": -np.inf,
+        "negative": -1.5,
+    }
+    if mode not in values:
+        raise ValueError(f"unknown mode {mode!r}; use one of {sorted(values)}")
+    pos = tuple(int(p) for p in positions)
+    w = np.asarray(stream.weight).copy()
+    w[list(pos)] = np.float32(values[mode])
+    kind = "negative_weight" if mode == "negative" else "nonfinite_weight"
+    return (
+        _replace(stream, weight=w),
+        InjectedFault(
+            kind=kind,
+            positions=pos,
+            description=f"weight -> {values[mode]} at {list(pos)}",
+        ),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Result corruptions (for check_matching)
+# ---------------------------------------------------------------------------
+
+
+def corrupt_assigned(result: MatchingResult, position: int, value: int) -> MatchingResult:
+    """Rewrite ``assigned[position] = value``, keeping the bit storage.
+
+    Depending on ``value`` and the stream this manufactures an
+    out-of-range substream, an ineligible/padding/self-loop record, or a
+    duplicate per-substream match — the test picks the scenario."""
+    assigned = np.asarray(result.assigned).copy()
+    assigned[int(position)] = np.int32(value)
+    return result.with_assigned(jnp.asarray(assigned))
+
+
+def flip_matching_bit(result: MatchingResult, vertex: int, substream: int) -> MatchingResult:
+    """Flip one matching bit ``mb[vertex, substream]`` in the result's own
+    storage — XORing the byte of the packed bit-plane block when the
+    result is packed, the bool entry when dense."""
+    if result.is_packed:
+        mbp = np.asarray(result.mb_packed).copy()
+        mbp[int(vertex), int(substream) // 8] ^= np.uint8(1 << (int(substream) % 8))
+        return MatchingResult(
+            assigned=result.assigned, mb_packed=jnp.asarray(mbp), L=result.L
+        )
+    mb = np.asarray(result.mb).copy()
+    mb[int(vertex), int(substream)] ^= True
+    return MatchingResult(assigned=result.assigned, mb=jnp.asarray(mb))
+
+
+def repacked(result: MatchingResult) -> MatchingResult:
+    """The same result in packed storage (identity if already packed) —
+    lets bit-plane corruption tests cover the packed path explicitly."""
+    if result.is_packed:
+        return result
+    return MatchingResult(
+        assigned=result.assigned, mb_packed=bitpack.pack_bits(result.mb), L=result.L
+    )
+
+
+# ---------------------------------------------------------------------------
+# Schedule faults (for validate_schedule / the cascade)
+# ---------------------------------------------------------------------------
+
+
+def truncate_schedule(schedule):
+    """Drop the last segment row of the slot layout — the shape of a stale
+    schedule persisted for a shorter stream. ``validate_schedule`` must
+    reject it (slot layout no longer agrees with the wave order)."""
+    if schedule.num_segments == 0:
+        raise ValueError("cannot truncate an empty schedule")
+    return dataclasses.replace(schedule, slots=schedule.slots[:-1].copy())
+
+
+def duplicate_order_entry(schedule):
+    """Schedule the first edge twice (replacing the last scheduled edge,
+    consistently in ``order`` AND the slot layout). When the two copies
+    land in different waves this passes the coverage, slot-agreement and
+    per-wave disjointness checks — only the order-is-a-permutation check
+    rejects it."""
+    if schedule.num_scheduled < 2:
+        raise ValueError("need >= 2 scheduled edges to duplicate one")
+    order = schedule.order.copy()
+    slots = schedule.slots.copy()
+    flat = slots.reshape(-1)
+    pos = np.flatnonzero(flat >= 0)
+    order[-1] = order[0]
+    flat[pos[-1]] = order[0]
+    return dataclasses.replace(
+        schedule, order=order, slots=flat.reshape(slots.shape)
+    )
+
+
+def permute_schedule(schedule):
+    """Reverse the wave-major order while keeping the slot layout — the
+    shape of a schedule whose derived fields drifted after a stream
+    permutation. ``validate_schedule`` must reject it (requires >= 2
+    scheduled edges to be an actual corruption)."""
+    if schedule.num_scheduled < 2:
+        raise ValueError("permuting < 2 scheduled edges is a no-op")
+    return dataclasses.replace(schedule, order=schedule.order[::-1].copy())
+
+
+# ---------------------------------------------------------------------------
+# Plan / compile fault forcing (for the fallback cascade)
+# ---------------------------------------------------------------------------
+
+
+class InjectedFailure(RuntimeError):
+    """The exception :func:`failing` raises from patched internals."""
+
+
+#: Patchable ops internals, by short target name. The *module attributes*
+#: are patched (the wrappers look them up at call time), so the jit cache
+#: cannot route around an injected failure.
+_TARGETS = {
+    "vmem_plan": "vmem_plan",
+    "wave_plan": "wave_plan",
+    "mega_plan": "mega_plan",
+    "edges_device": "_substream_match_edges",
+    "waves_device": "_waves_device",
+    "mega_device": "_mega_device",
+    "scan_oracle": "mwm_scan",
+    "waves_xla": "mwm_waves",
+}
+
+
+@contextlib.contextmanager
+def failing(*targets: str, exc_type=InjectedFailure):
+    """Force the named ops/matching internals to raise inside the block.
+
+    ``targets`` are keys of :data:`_TARGETS` — planners (``vmem_plan``,
+    ``wave_plan``, ``mega_plan``), jitted device entries
+    (``edges_device``, ``waves_device``, ``mega_device``), or the XLA
+    fallbacks (``waves_xla``, ``scan_oracle``). Always restores the
+    originals, even when the block raises."""
+    from repro.core import matching as _matching
+    from repro.kernels.substream_match import ops as _ops
+
+    unknown = [t for t in targets if t not in _TARGETS]
+    if unknown:
+        raise ValueError(f"unknown targets {unknown}; use {sorted(_TARGETS)}")
+
+    def _raiser(name):
+        def _fail(*args, **kwargs):
+            raise exc_type(f"injected failure in {name}")
+
+        return _fail
+
+    saved = []
+    try:
+        for t in targets:
+            attr = _TARGETS[t]
+            module = _matching if t in ("scan_oracle", "waves_xla") else _ops
+            saved.append((module, attr, getattr(module, attr)))
+            setattr(module, attr, _raiser(t))
+        yield
+    finally:
+        for module, attr, fn in reversed(saved):
+            setattr(module, attr, fn)

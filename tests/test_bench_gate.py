@@ -8,7 +8,9 @@ loud failure on structurally broken reports. Since the telemetry gates
 landed, every engine row must also carry a complete ``stage_seconds``
 split and a counter set matching the embedded ``expected_counters``
 plan accounting bit-exactly — missing or inconsistent telemetry fails
-the gate too.
+the gate too. The guard gate additionally requires a clean per-graph
+``validation`` record and ``fallback.count == 0`` on every Pallas row:
+a bench number must come from the engine it is labeled with.
 """
 import json
 import pathlib
@@ -23,8 +25,9 @@ from benchmarks.bench_throughput import (
     check_report,
 )
 
-#: Gate messages: 3 perf gates + telemetry structure + plan counters.
-N_GATES = 5
+#: Gate messages: 3 perf gates + telemetry structure + plan counters
+#: + the clean-path guard (validation clean, no fallback degradation).
+N_GATES = 6
 
 _WAVES_EXPECT = {
     "plan.gather_bytes": 960,
@@ -58,21 +61,28 @@ def _engine_row(counters=None):
 
 
 def _graph(scale=10, speedup=9.0, fill=0.7, mega=1.3):
-    engines = {
-        name: _engine_row()
-        for name in ("scan", "pallas_edges", "waves_xla", "rounds")
-    }
+    engines = {name: _engine_row() for name in ("scan", "waves_xla", "rounds")}
+    engines["pallas_edges"] = _engine_row(
+        {"stream.num_edges": 8192, "fallback.count": 0}
+    )
     engines["pallas_waves"] = _engine_row(
-        {"stream.num_edges": 8192, **_WAVES_EXPECT}
+        {"stream.num_edges": 8192, "fallback.count": 0, **_WAVES_EXPECT}
     )
     engines["pallas_mega"] = _engine_row(
-        {"stream.num_edges": 8192, **_MEGA_EXPECT}
+        {"stream.num_edges": 8192, "fallback.count": 0, **_MEGA_EXPECT}
     )
     return {
         "scale": scale,
         "speedup_pallas_waves_vs_edges": speedup,
         "wave_fill": fill,
         "speedup_mega_vs_xla": mega,
+        "validation": {
+            "policy": "strict",
+            "guard.num_edges": 8192,
+            "guard.num_valid_in": 8192,
+            "guard.dropped_edges": 0,
+            "guard.num_problems": 0,
+        },
         "expected_counters": {
             "pallas_waves": dict(_WAVES_EXPECT),
             "pallas_mega": dict(_MEGA_EXPECT),
@@ -199,6 +209,60 @@ def test_missing_expected_counters_fails():
     ok, msgs = check_report(_report([g]))
     assert not ok
     assert any("expected_counters" in m for m in msgs)
+
+
+def test_missing_validation_block_fails():
+    """A report that stops recording the guard validation cannot pass."""
+    g = _graph()
+    del g["validation"]
+    ok, msgs = check_report(_report([g]))
+    assert not ok
+    assert any("no validation block" in m for m in msgs)
+
+
+def test_dirty_clean_path_fails():
+    """Any dropped edge / detected problem on the bench path is a FAIL —
+    the clean workload generator must never need sanitizing."""
+    g = _graph()
+    g["validation"]["guard.dropped_edges"] = 3
+    g["validation"]["guard.num_problems"] = 1
+    ok, msgs = check_report(_report([g]))
+    assert not ok
+    assert any("guard.dropped_edges = 3" in m for m in msgs)
+    assert any("guard.num_problems = 1" in m for m in msgs)
+
+
+def test_nonzero_fallback_count_fails():
+    """A Pallas row that silently degraded down the cascade fails the
+    gate — its number is not the engine it is labeled with."""
+    g = _graph()
+    g["engines"]["pallas_mega"]["counters"]["fallback.count"] = 2
+    ok, msgs = check_report(_report([g]))
+    assert not ok
+    assert any(
+        "pallas_mega" in m and "fallback.count = 2" in m for m in msgs
+    )
+
+
+def test_missing_fallback_counter_fails():
+    """Dropping the counter (e.g. running with on_plan_failure='raise')
+    fails loudly rather than passing vacuously."""
+    g = _graph()
+    del g["engines"]["pallas_waves"]["counters"]["fallback.count"]
+    ok, msgs = check_report(_report([g]))
+    assert not ok
+    assert any(
+        "pallas_waves" in m and "no fallback.count" in m for m in msgs
+    )
+
+
+def test_non_pallas_rows_exempt_from_fallback_counter():
+    """The XLA/rounds engines have no cascade; the guard gate only
+    inspects pallas_* rows."""
+    g = _graph()
+    assert "fallback.count" not in g["engines"]["waves_xla"]["counters"]
+    ok, _ = check_report(_report([g]))
+    assert ok
 
 
 def test_check_exits_nonzero_with_message(monkeypatch, capsys):
