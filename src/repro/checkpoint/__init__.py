@@ -1,3 +1,15 @@
 from repro.checkpoint.manager import CheckpointManager, save_pytree, load_pytree
+from repro.checkpoint.snapshots import (
+    SnapshotCorruptError,
+    SnapshotManager,
+    SnapshotMismatchError,
+)
 
-__all__ = ["CheckpointManager", "save_pytree", "load_pytree"]
+__all__ = [
+    "CheckpointManager",
+    "save_pytree",
+    "load_pytree",
+    "SnapshotManager",
+    "SnapshotMismatchError",
+    "SnapshotCorruptError",
+]

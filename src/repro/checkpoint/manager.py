@@ -6,9 +6,14 @@ Design for the 1000-node regime:
   * atomicity: write to ``step_XXXX.tmp/`` then ``os.rename`` — a crash
     mid-write never corrupts the latest checkpoint; the manifest is the
     commit record and is written last;
+  * durability: every file and the containing directories are fsync'd
+    around the rename (see :meth:`CheckpointManager._commit`) — a power
+    loss after ``save`` returns can not roll back or tear the commit;
   * async save: device->host transfer happens on the caller thread (cheap,
-    and consistent), file IO happens on a background thread so the train
-    loop overlaps the write with the next steps;
+    and consistent), file IO happens on a persistent writer thread fed by
+    a bounded queue — the producer never joins an in-flight write, it
+    only pays the host copy + enqueue, with backpressure once
+    ``QUEUE_DEPTH`` snapshots are outstanding;
   * retention: keep the newest ``keep`` checkpoints.
 
 On a real multi-host cluster each host writes its owned shards and the
@@ -20,6 +25,7 @@ from __future__ import annotations
 
 import json
 import os
+import queue
 import shutil
 import threading
 import time
@@ -73,18 +79,42 @@ def load_pytree(template, path: str, shardings=None):
         return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
+def _fsync_path(path: str) -> None:
+    """fsync a file or directory by path (directories need O_RDONLY)."""
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
 class CheckpointManager:
+    #: Bound on queued-but-unwritten async checkpoints. Each queued item
+    #: holds a full host copy of the state, so the bound caps memory;
+    #: a producer outrunning the writer blocks in ``save`` (backpressure)
+    #: instead of accumulating snapshots without limit.
+    QUEUE_DEPTH = 4
+
     def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
         self.directory = directory
         self.keep = keep
         self.async_save = async_save
         os.makedirs(directory, exist_ok=True)
-        self._pending: Optional[threading.Thread] = None
+        self._queue: Optional[queue.Queue] = None
+        self._worker: Optional[threading.Thread] = None
 
     # ------------------------------------------------------------- save
 
     def save(self, step: int, state: dict[str, Any], metadata: Optional[dict] = None):
-        """state: name -> pytree. Blocks only for device->host transfer."""
+        """state: name -> pytree. Blocks only for device->host transfer.
+
+        Async saves hand the host copy to a persistent writer thread via
+        a bounded queue — the caller never joins the in-flight write
+        (the old spawn-and-join-previous pattern stalled the producer
+        for the tail of the previous write whenever the writer ran
+        slower than the step), so the producer-visible cost is just the
+        device->host copy plus an enqueue.
+        """
         host_state = {
             name: jax.tree_util.tree_map(lambda x: np.asarray(x), tree)
             for name, tree in state.items()
@@ -92,13 +122,30 @@ class CheckpointManager:
         meta = dict(metadata or {})
         meta.update({"step": step, "time": time.time(), "trees": sorted(host_state)})
         if self.async_save:
-            self.wait()
-            self._pending = threading.Thread(
-                target=self._write, args=(step, host_state, meta), daemon=True
-            )
-            self._pending.start()
+            self._ensure_worker()
+            self._queue.put((step, host_state, meta))
         else:
             self._write(step, host_state, meta)
+
+    def _ensure_worker(self):
+        if self._worker is None or not self._worker.is_alive():
+            # (re)start: the worker only dies when a write raised — the
+            # exception escaped _drain after marking the item done, so a
+            # later save must not enqueue onto a dead thread
+            if self._queue is None:
+                self._queue = queue.Queue(maxsize=self.QUEUE_DEPTH)
+            self._worker = threading.Thread(target=self._drain, daemon=True)
+            self._worker.start()
+
+    def _drain(self):
+        while True:
+            item = self._queue.get()
+            try:
+                self._write(*item)
+            finally:
+                # task_done in finally: wait() must unblock even when a
+                # write dies (fault injection kills the commit mid-way)
+                self._queue.task_done()
 
     def _write(self, step: int, host_state, meta):
         final = os.path.join(self.directory, f"step_{step:08d}")
@@ -113,13 +160,33 @@ class CheckpointManager:
             json.dump(meta, f)
         if os.path.exists(final):
             shutil.rmtree(final)
-        os.rename(tmp, final)
+        self._commit(tmp, final)
         self._gc()
 
+    def _commit(self, tmp: str, final: str) -> None:
+        """Crash-durable publish of a fully written ``tmp`` dir.
+
+        ``os.rename`` alone is *atomic* but not *durable*: the data
+        blocks, the tmp-dir entries, and the parent-dir rename can all
+        still sit in the page cache when power is lost, leaving a
+        renamed dir with torn npz payloads. Order of operations:
+        fsync every file in ``tmp`` (payload hits disk), fsync ``tmp``
+        itself (its directory entries hit disk), rename, then fsync the
+        parent so the rename is journaled. Tests inject a crash here
+        (faultline ``kill_mid_snapshot``) to prove a torn commit is
+        never visible as the latest step."""
+        for name in os.listdir(tmp):
+            _fsync_path(os.path.join(tmp, name))
+        _fsync_path(tmp)
+        os.rename(tmp, final)
+        _fsync_path(self.directory)
+
     def wait(self):
-        if self._pending is not None:
-            self._pending.join()
-            self._pending = None
+        """Block until every queued async write is durably committed
+        (or died trying — fault-injected commits count as drained so a
+        crashed writer can never deadlock the caller)."""
+        if self._queue is not None:
+            self._queue.join()
 
     def _gc(self):
         steps = self.all_steps()

@@ -12,6 +12,8 @@ Public API:
   mwm_pipeline          — end-to-end: Part 1 + Part 2 → matching + weight
   validate_stream / check_matching — input guard + result invariants
                           (strict / sanitize / off policies, repro.core.guard)
+  MatchState            — resumable per-stream-position state (repro.core.state)
+  ExecutionGuard        — deadline/retry/straggler guard (repro.core.executor)
 """
 from __future__ import annotations
 
@@ -33,7 +35,14 @@ from repro.core.guard import (
     stream_problems,
     validate_stream,
 )
+from repro.core.executor import (
+    DeadlineExceededError,
+    ExecutionGuard,
+    RetriesExhaustedError,
+    is_transient,
+)
 from repro.core.matching import mwm_scan, mwm_waves, substream_matchings
+from repro.core.state import MatchState, fingerprint_for
 from repro.core.blocked import mwm_blocked, lexicographic_order, permute_stream
 from repro.core.rounds import mwm_rounds, mwm_rounds_sharded
 from repro.core.merge import merge_host, merge_device, matching_weight
@@ -97,4 +106,10 @@ __all__ = [
     "gseq",
     "exact_mwm_weight",
     "mwm_pipeline",
+    "MatchState",
+    "fingerprint_for",
+    "ExecutionGuard",
+    "DeadlineExceededError",
+    "RetriesExhaustedError",
+    "is_transient",
 ]

@@ -22,8 +22,14 @@ from repro.core.types import EdgeStream, MatchingResult, SubstreamConfig, eligib
 
 
 @partial(jax.jit, static_argnames=("cfg",))
-def mwm_scan(stream: EdgeStream, cfg: SubstreamConfig) -> MatchingResult:
+def mwm_scan(
+    stream: EdgeStream, cfg: SubstreamConfig, mb0: jax.Array | None = None
+) -> MatchingResult:
     """Listing 1, Part 1. Carries MB in a `lax.scan` over the stream.
+
+    ``mb0`` (bool [n, L], default zeros) seeds the matching bits — the
+    epoch executor's carried state; chunked runs stay bit-identical to
+    one-shot because the greedy update is confluent in the carried MB.
 
     Per edge e=(u,v,w):
       te    = [w >= (1+eps)^i]_i                (eligibility, Stage 4)
@@ -59,9 +65,13 @@ def mwm_scan(stream: EdgeStream, cfg: SubstreamConfig) -> MatchingResult:
         ).max()
         return mb, idx
 
-    mb0 = jnp.zeros((cfg.n, cfg.L), dtype=bool)
+    init = (
+        jnp.zeros((cfg.n, cfg.L), dtype=bool)
+        if mb0 is None
+        else mb0.astype(bool)
+    )
     mb, assigned = jax.lax.scan(
-        step, mb0, (stream.src, stream.dst, stream.weight, stream.valid)
+        step, init, (stream.src, stream.dst, stream.weight, stream.valid)
     )
     return MatchingResult(assigned=assigned, mb=mb)
 
@@ -96,7 +106,7 @@ def substream_matchings(stream: EdgeStream, cfg: SubstreamConfig) -> jax.Array:
 
 
 @partial(jax.jit, static_argnames=("cfg", "m"))
-def _wave_scan(u, v, w, ok, slots, cfg: SubstreamConfig, m: int):
+def _wave_scan(u, v, w, ok, slots, cfg: SubstreamConfig, m: int, mb0=None):
     """Scan over segments; each step is one vectorized [SEG, L] update.
 
     ``u/v/w/ok`` are the [num_segments, SEG] fill-packed slot arrays of
@@ -122,8 +132,12 @@ def _wave_scan(u, v, w, ok, slots, cfg: SubstreamConfig, m: int):
         ).max(axis=1)
         return mb, idx
 
-    mb0 = jnp.zeros((cfg.n, cfg.L), dtype=bool)
-    mb, idx = jax.lax.scan(step, mb0, (u, v, w, ok))
+    init = (
+        jnp.zeros((cfg.n, cfg.L), dtype=bool)
+        if mb0 is None
+        else mb0.astype(bool)
+    )
+    mb, idx = jax.lax.scan(step, init, (u, v, w, ok))
     from repro.graph.waves import scatter_slot_assignments
 
     return scatter_slot_assignments(slots, idx, m), mb
@@ -135,8 +149,12 @@ def mwm_waves(
     schedule=None,
     max_width: int | None = None,
     telemetry=obs.DISABLED,
+    mb0: jax.Array | None = None,
 ) -> MatchingResult:
     """Listing 1 Part 1 over conflict-free waves (XLA parity oracle).
+
+    ``mb0`` (bool [n, L], default zeros) seeds the matching bits — the
+    epoch executor's carried state.
 
     Decomposes the stream with :func:`repro.graph.waves.wave_schedule`
     (or reuses a precomputed ``schedule``) and processes one
@@ -186,7 +204,7 @@ def mwm_waves(
         rec.put("stream.num_edges", stream.num_edges)
     key = (
         "waves_xla", schedule.num_segments, schedule.width, cfg.n, cfg.L,
-        cfg.eps, stream.num_edges,
+        cfg.eps, stream.num_edges, mb0 is not None,
     )
     with rec.device_stage(key):
         assigned, mb = _wave_scan(
@@ -197,6 +215,7 @@ def mwm_waves(
             jnp.asarray(schedule.slots),
             cfg,
             stream.num_edges,
+            mb0=None if mb0 is None else jnp.asarray(mb0),
         )
         rec.block((assigned, mb))
     rec.finish()

@@ -1,0 +1,242 @@
+"""Resumable matching state — the paper's key robustness property.
+
+The semi-streaming formulation keeps *all* algorithm state in a tiny
+per-vertex bit block (``mb[n, ceil(L/8)]``) plus the recorded-edge
+prefix of ``assigned``, updated by one sequential pass over the edge
+stream. That makes the computation checkpointable at any stream
+position: :class:`MatchState` is exactly that state plus a config
+fingerprint, and the epoch executor
+(:func:`repro.kernels.substream_match.ops.match_epochs`) threads it
+through the engines — a run resumed from a snapshot is bit-identical
+to the uninterrupted run because greedy matching is confluent in the
+carried bits (see docs/paper_map.md).
+
+``MatchState`` is host-side (numpy) by design: snapshots must not
+capture device buffers, and the epoch driver's carry is consumed on
+the host between device calls anyway.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+
+import numpy as np
+
+from repro.core import bitpack
+from repro.core.types import EdgeStream, MatchingResult, SubstreamConfig
+
+#: Format version stamped into snapshots; bump on layout changes so a
+#: stale snapshot fails loudly instead of deserializing garbage.
+STATE_VERSION = 1
+
+
+def fingerprint_for(
+    stream: EdgeStream, cfg: SubstreamConfig, packed: bool
+) -> str:
+    """Content hash binding a state to (stream, cfg, storage layout).
+
+    Resuming against a different stream or config would silently
+    produce a wrong matching — the fingerprint turns that into a
+    structured :class:`repro.checkpoint.snapshots.SnapshotMismatchError`
+    at restore time. sha256 over the config scalars and the raw bytes
+    of the stream arrays, truncated to 16 hex chars (64 bits — plenty
+    for corruption/mix-up detection, not a security boundary).
+    """
+    h = hashlib.sha256()
+    h.update(
+        f"v{STATE_VERSION}|n={cfg.n}|L={cfg.L}|eps={cfg.eps!r}|"
+        f"packed={bool(packed)}|m={stream.num_edges}|".encode()
+    )
+    for arr in (stream.src, stream.dst, stream.weight, stream.valid):
+        h.update(np.ascontiguousarray(np.asarray(arr)).tobytes())
+    return h.hexdigest()[:16]
+
+
+@dataclasses.dataclass(frozen=True)
+class MatchState:
+    """Everything Part 1 needs to continue from stream position ``pos``.
+
+    ``assigned`` holds the per-edge substream assignment for the
+    consumed prefix (``-1`` beyond ``pos``), ``mb`` the matching-bit
+    block in the run's storage layout (uint8 ``[n, ceil(L/8)]`` packed /
+    bool ``[n, L]`` dense), and ``recorded_counts`` the per-substream
+    recorded-edge cursors ``|C_i|`` — redundant with ``assigned`` by
+    construction, which is exactly why they are stored: :meth:`problems`
+    recomputes them and a torn or mixed-up snapshot fails the check.
+    """
+
+    fingerprint: str
+    pos: int
+    num_edges: int
+    n: int
+    L: int
+    packed: bool
+    assigned: np.ndarray  # int32 [num_edges]; -1 beyond pos
+    mb: np.ndarray  # uint8 [n, W] packed / bool [n, L] dense
+    recorded_counts: np.ndarray  # int64 [L]
+
+    # ------------------------------------------------------------ build
+
+    @staticmethod
+    def initial(
+        stream: EdgeStream, cfg: SubstreamConfig, packed: bool
+    ) -> "MatchState":
+        """The pos-0 zero state for a fresh run."""
+        words = bitpack.packed_width(max(cfg.L, 1))
+        mb = (
+            np.zeros((cfg.n, words), np.uint8)
+            if packed
+            else np.zeros((cfg.n, cfg.L), bool)
+        )
+        return MatchState(
+            fingerprint=fingerprint_for(stream, cfg, packed),
+            pos=0,
+            num_edges=stream.num_edges,
+            n=cfg.n,
+            L=cfg.L,
+            packed=bool(packed),
+            assigned=np.full(stream.num_edges, -1, np.int32),
+            mb=mb,
+            recorded_counts=np.zeros(cfg.L, np.int64),
+        )
+
+    # ---------------------------------------------------------- advance
+
+    def advance(self, result: MatchingResult, end: int) -> "MatchState":
+        """Fold one epoch's result (edges ``[pos, end)``) into the state.
+
+        ``result`` is the engine output for the epoch slice run with
+        ``mb0 = self.mb``; its ``assigned`` covers ``end - pos`` edges
+        and its bit block *replaces* the carried one (the engines carry
+        it through, so it is the cumulative block, not a delta).
+        """
+        if not self.pos <= end <= self.num_edges:
+            raise ValueError(f"epoch end {end} outside [{self.pos}, {self.num_edges}]")
+        epoch_assigned = np.asarray(result.assigned, np.int32)
+        if epoch_assigned.shape != (end - self.pos,):
+            raise ValueError(
+                f"epoch result covers {epoch_assigned.shape} edges, "
+                f"expected {(end - self.pos,)}"
+            )
+        assigned = self.assigned.copy()
+        assigned[self.pos : end] = epoch_assigned
+        hits = epoch_assigned[epoch_assigned >= 0]
+        counts = self.recorded_counts + np.bincount(
+            hits, minlength=self.L
+        ).astype(np.int64)
+        mb = (
+            np.asarray(result.mb_packed, np.uint8)
+            if self.packed
+            else np.asarray(result.mb, bool)
+        )
+        return dataclasses.replace(
+            self, pos=int(end), assigned=assigned, recorded_counts=counts, mb=mb
+        )
+
+    # ------------------------------------------------------------ views
+
+    @property
+    def done(self) -> bool:
+        return self.pos == self.num_edges
+
+    @property
+    def mb0(self) -> np.ndarray | None:
+        """The carried bit block as substream_match's ``mb0`` operand
+        (``None`` at pos 0 — keeps the fresh run on the zero-state jit
+        variants, byte-identical to a non-resumable call)."""
+        return None if self.pos == 0 else self.mb
+
+    def result(self) -> MatchingResult:
+        """The completed run as a :class:`MatchingResult` (requires
+        ``done``; a partial state has no meaningful matching yet)."""
+        if not self.done:
+            raise ValueError(
+                f"run incomplete: pos {self.pos} of {self.num_edges} edges"
+            )
+        if self.packed:
+            return MatchingResult(
+                assigned=self.assigned, mb_packed=self.mb, L=self.L
+            )
+        return MatchingResult(assigned=self.assigned, mb=self.mb)
+
+    # -------------------------------------------------------- integrity
+
+    def problems(self) -> list[str]:
+        """Structural integrity check; [] when consistent.
+
+        Shape/dtype/range checks plus the redundancy check: the
+        recorded-count cursors must equal a recount of ``assigned`` —
+        a torn snapshot (bit block from one epoch, assigned from
+        another) fails here even though each array alone looks fine.
+        """
+        out = []
+        words = bitpack.packed_width(max(self.L, 1))
+        want_mb = (self.n, words) if self.packed else (self.n, self.L)
+        if tuple(self.mb.shape) != want_mb:
+            out.append(f"mb shape {self.mb.shape} != {want_mb}")
+        if self.assigned.shape != (self.num_edges,):
+            out.append(
+                f"assigned shape {self.assigned.shape} != {(self.num_edges,)}"
+            )
+        if not 0 <= self.pos <= self.num_edges:
+            out.append(f"pos {self.pos} outside [0, {self.num_edges}]")
+            return out
+        if self.assigned.size:
+            lo = int(self.assigned.min())
+            hi = int(self.assigned.max())
+            if lo < -1 or hi >= self.L:
+                out.append(f"assigned values [{lo}, {hi}] outside [-1, {self.L})")
+        if (self.assigned[self.pos :] != -1).any():
+            out.append("assigned set beyond pos")
+        if self.recorded_counts.shape != (self.L,):
+            out.append(
+                f"recorded_counts shape {self.recorded_counts.shape} != {(self.L,)}"
+            )
+        else:
+            prefix = self.assigned[: self.pos]
+            hits = prefix[prefix >= 0]
+            want = np.bincount(hits, minlength=self.L).astype(np.int64)
+            if not np.array_equal(want, self.recorded_counts):
+                out.append("recorded_counts disagree with assigned recount")
+        return out
+
+    # ------------------------------------------------------ persistence
+
+    def to_arrays(self) -> dict[str, np.ndarray]:
+        """The array payload for :func:`repro.checkpoint.save_pytree`.
+        ``mb`` is stored as uint8 either way (npz round-trips bool fine,
+        but a fixed on-disk dtype keeps the format stable)."""
+        return {
+            "assigned": self.assigned,
+            "mb": self.mb.astype(np.uint8),
+            "recorded_counts": self.recorded_counts,
+        }
+
+    def metadata(self) -> dict:
+        """The JSON-safe scalars for the snapshot manifest."""
+        return {
+            "state_version": STATE_VERSION,
+            "fingerprint": self.fingerprint,
+            "pos": int(self.pos),
+            "num_edges": int(self.num_edges),
+            "n": int(self.n),
+            "L": int(self.L),
+            "packed": bool(self.packed),
+        }
+
+    @staticmethod
+    def from_arrays(meta: dict, arrays: dict) -> "MatchState":
+        """Rebuild from :meth:`metadata` + :meth:`to_arrays` payloads."""
+        packed = bool(meta["packed"])
+        mb = np.asarray(arrays["mb"], np.uint8)
+        return MatchState(
+            fingerprint=str(meta["fingerprint"]),
+            pos=int(meta["pos"]),
+            num_edges=int(meta["num_edges"]),
+            n=int(meta["n"]),
+            L=int(meta["L"]),
+            packed=packed,
+            assigned=np.asarray(arrays["assigned"], np.int32),
+            mb=mb if packed else mb.astype(bool),
+            recorded_counts=np.asarray(arrays["recorded_counts"], np.int64),
+        )

@@ -5,7 +5,9 @@ Flow on a real cluster: a node dies -> the job restarts on the survivors
 the checkpoint (which stores *unsharded logical* arrays, see
 repro.checkpoint) is restored with the new shardings. Nothing in the
 checkpoint format depends on the old topology, which is what makes this
-work. Exercised end-to-end on host devices in tests/test_fault_tolerance.
+work. The degradation ladder (``plan_remesh`` across shrinking device
+counts) and the host-device mesh rebuild are covered by
+``tests/test_fault_tolerance.py``.
 """
 from __future__ import annotations
 

@@ -9,8 +9,11 @@ reacts per policy:
   * "remesh"    — trigger the elastic path (distributed/elastic.py).
 
 In this single-host container the monitor is exercised with injected
-delays (tests/test_fault_tolerance.py); the policy machinery is identical
-on a real cluster where step times come from the host-local clock.
+delays in ``tests/test_fault_tolerance.py``, and it watches per-epoch
+times in the resumable executor (``repro.core.executor.ExecutionGuard``
+emits ``guard.straggler`` telemetry events from its verdicts); the
+policy machinery is identical on a real cluster where step times come
+from the host-local clock.
 """
 from __future__ import annotations
 

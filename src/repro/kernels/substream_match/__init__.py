@@ -1,1 +1,4 @@
-from repro.kernels.substream_match.ops import substream_match  # noqa: F401
+from repro.kernels.substream_match.ops import (  # noqa: F401
+    match_epochs,
+    substream_match,
+)

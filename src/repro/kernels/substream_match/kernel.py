@@ -59,13 +59,26 @@ from jax.experimental.pallas import tpu as pltpu
 _CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
 
 
-def _kernel(edges_ref, w_ref, thr_ref, assigned_ref, mb_out_ref, mb, *, block_e: int):
+def _split_refs(refs):
+    """Unpack the trailing kernel refs: ``(assigned, mb_out, scratch)``
+    plus an optional leading ``mb0`` input (the epoch executor's carried
+    initial bit block — see ops.match_epochs). The wrappers only append
+    the extra operand when an initial state is given, so the zero-state
+    call graph (and its jit cache keys) is byte-for-byte unchanged."""
+    if len(refs) == 4:
+        return refs[0], refs[1], refs[2], refs[3]
+    assigned_ref, mb_out_ref, mb = refs
+    return None, assigned_ref, mb_out_ref, mb
+
+
+def _kernel(edges_ref, w_ref, thr_ref, *refs, block_e: int):
+    mb0_ref, assigned_ref, mb_out_ref, mb = _split_refs(refs)
     b = pl.program_id(0)
     nblocks = pl.num_programs(0)
 
     @pl.when(b == 0)
     def _init():
-        mb[...] = jnp.zeros_like(mb)
+        mb[...] = jnp.zeros_like(mb) if mb0_ref is None else mb0_ref[...]
 
     L_pad = mb.shape[1]
     thr = thr_ref[0, :]  # [L_pad] f32; padding lanes hold +inf
@@ -101,16 +114,15 @@ def _kernel(edges_ref, w_ref, thr_ref, assigned_ref, mb_out_ref, mb, *, block_e:
         mb_out_ref[...] = mb[...]
 
 
-def _kernel_packed(
-    edges_ref, w_ref, thr_ref, assigned_ref, mb_out_ref, mb, *, block_e: int
-):
+def _kernel_packed(edges_ref, w_ref, thr_ref, *refs, block_e: int):
     """Packed bit-plane edge processor: mb rows are uint8 words of 8 bits."""
+    mb0_ref, assigned_ref, mb_out_ref, mb = _split_refs(refs)
     b = pl.program_id(0)
     nblocks = pl.num_programs(0)
 
     @pl.when(b == 0)
     def _init():
-        mb[...] = jnp.zeros_like(mb)
+        mb[...] = jnp.zeros_like(mb) if mb0_ref is None else mb0_ref[...]
 
     W_pad = mb.shape[1]
     thr = thr_ref[...]  # [8, W_pad] f32; +inf in padding slots
@@ -154,8 +166,8 @@ def _kernel_packed(
 
 
 def _kernel_waves(
-    edges_ref, w_ref, thr_ref, assigned_ref, mb_out_ref, mb,
-    *, block_s: int, seg: int, n_out: int,
+    edges_ref, w_ref, thr_ref, *refs,
+    block_s: int, seg: int, n_out: int,
 ):
     """Segment-vectorized edge processor, unpacked int8 layout.
 
@@ -186,12 +198,13 @@ def _kernel_waves(
     gather (the per-edge kernel's addressing, seg rows at a time) or a
     one-hot MXU matmul — the wave semantics are unchanged.
     """
+    mb0_ref, assigned_ref, mb_out_ref, mb = _split_refs(refs)
     b = pl.program_id(0)
     nblocks = pl.num_programs(0)
 
     @pl.when(b == 0)
     def _init():
-        mb[...] = jnp.zeros_like(mb)
+        mb[...] = jnp.zeros_like(mb) if mb0_ref is None else mb0_ref[...]
 
     L_pad = mb.shape[1]
     thr = thr_ref[0, :]  # [L_pad] f32; padding lanes hold +inf
@@ -228,8 +241,8 @@ def _kernel_waves(
 
 
 def _kernel_waves_packed(
-    edges_ref, w_ref, thr_ref, assigned_ref, mb_out_ref, mb,
-    *, block_s: int, seg: int, n_out: int,
+    edges_ref, w_ref, thr_ref, *refs,
+    block_s: int, seg: int, n_out: int,
 ):
     """Segment-vectorized edge processor, packed uint8 bit-plane layout.
 
@@ -239,12 +252,13 @@ def _kernel_waves_packed(
     on the whole [seg, W_pad] uint8 tile before the in-place row
     scatter.
     """
+    mb0_ref, assigned_ref, mb_out_ref, mb = _split_refs(refs)
     b = pl.program_id(0)
     nblocks = pl.num_programs(0)
 
     @pl.when(b == 0)
     def _init():
-        mb[...] = jnp.zeros_like(mb)
+        mb[...] = jnp.zeros_like(mb) if mb0_ref is None else mb0_ref[...]
 
     W_pad = mb.shape[1]
     thr = thr_ref[...]  # [8, W_pad] f32; +inf in padding slots
@@ -295,10 +309,13 @@ def substream_match_pallas(
     n_pad: int,
     block_e: int = 1024,
     interpret: bool = True,
+    mb_init: jax.Array | None = None,  # int8 [n_pad, L_pad] carried-in bits
 ):
     """Raw pallas_call wrapper, unpacked int8 layout (legacy fallback).
 
     See ops.substream_match for the typed API and the packed default.
+    ``mb_init`` seeds the resident bit block instead of zeros (the epoch
+    executor's carried state); ``None`` keeps the zero-init fast path.
     """
     m_pad = edges.shape[0]
     assert m_pad % block_e == 0, (m_pad, block_e)
@@ -306,15 +323,22 @@ def substream_match_pallas(
     nblocks = m_pad // block_e
     grid = (nblocks,)
 
+    in_specs = [
+        pl.BlockSpec((block_e, 2), lambda b: (b, 0)),  # edge block (pipelined)
+        pl.BlockSpec((block_e, 1), lambda b: (b, 0)),  # weight block
+        pl.BlockSpec((1, L_pad), lambda b: (0, 0)),  # thresholds (resident)
+    ]
+    operands = [edges, weights.astype(jnp.float32), thresholds]
+    if mb_init is not None:
+        assert mb_init.shape == (n_pad, L_pad), (mb_init.shape, n_pad, L_pad)
+        in_specs.append(pl.BlockSpec((n_pad, L_pad), lambda b: (0, 0)))
+        operands.append(mb_init.astype(jnp.int8))
+
     kernel = functools.partial(_kernel, block_e=block_e)
     assigned, mb = pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_e, 2), lambda b: (b, 0)),  # edge block (pipelined)
-            pl.BlockSpec((block_e, 1), lambda b: (b, 0)),  # weight block
-            pl.BlockSpec((1, L_pad), lambda b: (0, 0)),  # thresholds (resident)
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((block_e, 1), lambda b: (b, 0)),
             pl.BlockSpec((n_pad, L_pad), lambda b: (0, 0)),
@@ -328,7 +352,7 @@ def substream_match_pallas(
         compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary",),
         ),
-    )(edges, weights.astype(jnp.float32), thresholds)
+    )(*operands)
     return assigned[:, 0], mb
 
 
@@ -339,10 +363,13 @@ def substream_match_pallas_packed(
     n_pad: int,
     block_e: int = 1024,
     interpret: bool = True,
+    mb_init: jax.Array | None = None,  # uint8 [n_pad, W_pad] carried-in bits
 ):
     """Raw pallas_call wrapper, packed uint8 bit-plane layout (default path).
 
     Returns (assigned int32 [m_pad], mb_packed uint8 [n_pad, W_pad]).
+    ``mb_init`` seeds the resident bit block instead of zeros (the epoch
+    executor's carried state); ``None`` keeps the zero-init fast path.
     """
     m_pad = edges.shape[0]
     assert m_pad % block_e == 0, (m_pad, block_e)
@@ -351,15 +378,22 @@ def substream_match_pallas_packed(
     nblocks = m_pad // block_e
     grid = (nblocks,)
 
+    in_specs = [
+        pl.BlockSpec((block_e, 2), lambda b: (b, 0)),  # edge block (pipelined)
+        pl.BlockSpec((block_e, 1), lambda b: (b, 0)),  # weight block
+        pl.BlockSpec((8, W_pad), lambda b: (0, 0)),  # bit-plane thresholds
+    ]
+    operands = [edges, weights.astype(jnp.float32), thresholds]
+    if mb_init is not None:
+        assert mb_init.shape == (n_pad, W_pad), (mb_init.shape, n_pad, W_pad)
+        in_specs.append(pl.BlockSpec((n_pad, W_pad), lambda b: (0, 0)))
+        operands.append(mb_init.astype(jnp.uint8))
+
     kernel = functools.partial(_kernel_packed, block_e=block_e)
     assigned, mb = pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_e, 2), lambda b: (b, 0)),  # edge block (pipelined)
-            pl.BlockSpec((block_e, 1), lambda b: (b, 0)),  # weight block
-            pl.BlockSpec((8, W_pad), lambda b: (0, 0)),  # bit-plane thresholds
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((block_e, 1), lambda b: (b, 0)),
             pl.BlockSpec((n_pad, W_pad), lambda b: (0, 0)),
@@ -373,7 +407,7 @@ def substream_match_pallas_packed(
         compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary",),
         ),
-    )(edges, weights.astype(jnp.float32), thresholds)
+    )(*operands)
     return assigned[:, 0], mb
 
 
@@ -415,8 +449,8 @@ def _high_bit_table() -> jax.Array:
 
 
 def _kernel_waves_mega(
-    seg_offsets_ref, uv_ref, w_ref, thr_ref, assigned_ref, mb_out_ref, mb,
-    *, tiles_per_block: int, bslots: int, seg_block: int, n_out: int,
+    seg_offsets_ref, uv_ref, w_ref, thr_ref, *refs,
+    tiles_per_block: int, bslots: int, seg_block: int, n_out: int,
 ):
     """Grid-pipelined segment megakernel, unpacked int8 layout.
 
@@ -426,12 +460,13 @@ def _kernel_waves_mega(
     compare ``lane < cnt`` and the matching state is one int8 byte per
     substream bit.
     """
+    mb0_ref, assigned_ref, mb_out_ref, mb = _split_refs(refs)
     b = pl.program_id(0)
     nblocks = pl.num_programs(0)
 
     @pl.when(b == 0)
     def _init():
-        mb[...] = jnp.zeros_like(mb)
+        mb[...] = jnp.zeros_like(mb) if mb0_ref is None else mb0_ref[...]
 
     L_pad = mb.shape[1]
     block = tiles_per_block * bslots
@@ -482,8 +517,8 @@ def _kernel_waves_mega(
 
 
 def _kernel_waves_mega_packed(
-    seg_offsets_ref, uv_ref, w_ref, thr_ref, assigned_ref, mb_out_ref, mb,
-    *, tiles_per_block: int, bslots: int, seg_block: int, n_out: int,
+    seg_offsets_ref, uv_ref, w_ref, thr_ref, *refs,
+    tiles_per_block: int, bslots: int, seg_block: int, n_out: int,
 ):
     """Grid-pipelined segment megakernel, packed uint8 bit-plane layout.
 
@@ -514,12 +549,13 @@ def _kernel_waves_mega_packed(
     loop: grid padding beyond the layout's real tile count is skipped
     entirely (its assigned slots stay -1), not processed-and-discarded.
     """
+    mb0_ref, assigned_ref, mb_out_ref, mb = _split_refs(refs)
     b = pl.program_id(0)
     nblocks = pl.num_programs(0)
 
     @pl.when(b == 0)
     def _init():
-        mb[...] = jnp.zeros_like(mb)
+        mb[...] = jnp.zeros_like(mb) if mb0_ref is None else mb0_ref[...]
 
     W_pad = mb.shape[1]
     block = tiles_per_block * bslots
@@ -580,6 +616,7 @@ def substream_match_pallas_mega(
     tiles_per_block: int,
     interpret: bool = True,
     packed: bool = True,
+    mb_init: jax.Array | None = None,  # [n_pad + SACRIFICIAL_ROWS, width]
 ):
     """Raw pallas_call wrapper for the grid-pipelined megakernel.
 
@@ -595,7 +632,10 @@ def substream_match_pallas_mega(
     pads): eligibility is prefix-structured, see :func:`_prefix_te_table`.
     ``seg_offsets`` rides as scalar prefetch; its last entry bounds the
     tile loop. Returns (assigned int32 [total] — -1 on every padding
-    slot — and mb as for the waves wrapper).
+    slot — and mb as for the waves wrapper). ``mb_init`` seeds the
+    resident bit block instead of zeros — shaped like the scratch
+    (``n_pad + SACRIFICIAL_ROWS`` rows; the sacrificial band must be
+    zero, though the kernel never reads it as a real vertex).
     """
     total = weights.shape[0]
     bslots = seg_block * seg
@@ -619,14 +659,20 @@ def substream_match_pallas_mega(
         seg_block=seg_block,
         n_out=n_pad,
     )
+    in_specs = [
+        pl.BlockSpec((2 * block, 1), lambda b, offs: (b, 0)),  # uv stream
+        pl.BlockSpec((block, 1), lambda b, offs: (b, 0)),  # weights
+        pl.BlockSpec((1, nbits), lambda b, offs: (0, 0)),  # thresholds
+    ]
+    operands = [seg_offsets, uv, weights.astype(jnp.float32), thresholds]
+    if mb_init is not None:
+        assert mb_init.shape == (n_rows, width), (mb_init.shape, n_rows, width)
+        in_specs.append(pl.BlockSpec((n_rows, width), lambda b, offs: (0, 0)))
+        operands.append(mb_init.astype(dtype))
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(nblocks,),
-        in_specs=[
-            pl.BlockSpec((2 * block, 1), lambda b, offs: (b, 0)),  # uv stream
-            pl.BlockSpec((block, 1), lambda b, offs: (b, 0)),  # weights
-            pl.BlockSpec((1, nbits), lambda b, offs: (0, 0)),  # thresholds
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((block, 1), lambda b, offs: (b, 0)),
             pl.BlockSpec((n_pad, width), lambda b, offs: (0, 0)),
@@ -644,7 +690,7 @@ def substream_match_pallas_mega(
         compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary",),
         ),
-    )(seg_offsets, uv, weights.astype(jnp.float32), thresholds)
+    )(*operands)
     return assigned[:, 0], mb
 
 
@@ -657,6 +703,7 @@ def substream_match_pallas_waves(
     block_s: int,
     interpret: bool = True,
     packed: bool = True,
+    mb_init: jax.Array | None = None,  # [n_pad + SACRIFICIAL_ROWS, width]
 ):
     """Raw pallas_call wrapper for the segment-vectorized kernels.
 
@@ -672,6 +719,9 @@ def substream_match_pallas_waves(
     positions via the schedule's slot map). Returns (assigned int32
     [num_segments_pad * seg], mb — uint8 [n_pad, W_pad] packed /
     int8 [n_pad, L_pad] unpacked; the sacrificial band is not flushed).
+    ``mb_init`` seeds the resident bit block instead of zeros — shaped
+    like the scratch (``n_pad + SACRIFICIAL_ROWS`` rows, sacrificial
+    band zero).
     """
     total = edges.shape[0]
     block = block_s * seg
@@ -686,15 +736,22 @@ def substream_match_pallas_waves(
         assert thresholds.shape[0] == 1, thresholds.shape
         kernel_fn, dtype = _kernel_waves, jnp.int8
 
+    in_specs = [
+        pl.BlockSpec((block, 2), lambda b: (b, 0)),  # segment block (pipelined)
+        pl.BlockSpec((block, 1), lambda b: (b, 0)),  # weight block
+        pl.BlockSpec(thresholds.shape, lambda b: (0, 0)),  # thresholds
+    ]
+    operands = [edges, weights.astype(jnp.float32), thresholds]
+    if mb_init is not None:
+        assert mb_init.shape == (n_rows, width), (mb_init.shape, n_rows, width)
+        in_specs.append(pl.BlockSpec((n_rows, width), lambda b: (0, 0)))
+        operands.append(mb_init.astype(dtype))
+
     kernel = functools.partial(kernel_fn, block_s=block_s, seg=seg, n_out=n_pad)
     assigned, mb = pl.pallas_call(
         kernel,
         grid=(nblocks,),
-        in_specs=[
-            pl.BlockSpec((block, 2), lambda b: (b, 0)),  # segment block (pipelined)
-            pl.BlockSpec((block, 1), lambda b: (b, 0)),  # weight block
-            pl.BlockSpec(thresholds.shape, lambda b: (0, 0)),  # thresholds
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((block, 1), lambda b: (b, 0)),
             pl.BlockSpec((n_pad, width), lambda b: (0, 0)),
@@ -708,5 +765,5 @@ def substream_match_pallas_waves(
         compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary",),
         ),
-    )(edges, weights.astype(jnp.float32), thresholds)
+    )(*operands)
     return assigned[:, 0], mb

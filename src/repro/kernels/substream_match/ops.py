@@ -425,6 +425,27 @@ def _empty_result(stream: EdgeStream, cfg: SubstreamConfig, packed: bool):
     return MatchingResult(assigned=assigned, mb=jnp.zeros((0, cfg.L), bool))
 
 
+def _mb0_pad(mb0, n, words, rows, width, packed):
+    """Pad a caller-format initial bit block (uint8 [n, words] packed /
+    bool [n, L] dense) to the kernel scratch shape [rows, width]; the
+    padding band (incl. the sacrificial rows) is zero — padding slots
+    carry w = 0, so those bits are never set nor read."""
+    dtype = jnp.uint8 if packed else jnp.int8
+    return (
+        jnp.zeros((rows, width), dtype).at[:n, :words].set(mb0.astype(dtype))
+    )
+
+
+def _mb0_dense(mb0, cfg: SubstreamConfig, packed: bool):
+    """Caller-format initial bits as the dense bool [n, L] the XLA
+    engines consume."""
+    if mb0 is None:
+        return None
+    if packed:
+        return bitpack.unpack_bits(jnp.asarray(mb0), cfg.L)
+    return jnp.asarray(mb0).astype(bool)
+
+
 def _repack(result: MatchingResult, packed: bool) -> MatchingResult:
     """Convert a dense XLA-fallback result to the storage the caller asked
     for, so cascade consumers see the same ``is_packed`` contract as the
@@ -451,24 +472,29 @@ def _run_engine(
     seg_block,
     block_s,
     telemetry,
+    mb0=None,
 ) -> MatchingResult:
     """Dispatch one concrete engine of the cascade. The XLA fallbacks are
     looked up through the module at call time (not from-imported), so the
-    fault injector can force them to fail too."""
+    fault injector can force them to fail too. ``mb0`` (caller storage:
+    uint8 [n, words] packed / bool [n, L] dense) seeds the matching bits;
+    the XLA rungs take the dense view."""
     if engine == "mega":
         return _substream_match_mega(
             stream, cfg, interpret=interpret, packed=packed, waves=waves,
             max_width=max_width, seg_block=seg_block, telemetry=telemetry,
+            mb0=mb0,
         )
     if engine == "waves":
         return _substream_match_waves(
             stream, cfg, interpret=interpret, packed=packed, waves=waves,
             max_width=max_width, block_s=block_s, telemetry=telemetry,
+            mb0=mb0,
         )
     if engine == "edges":
         return _edges_entry(
             stream, cfg, block_e=block_e, interpret=interpret, packed=packed,
-            telemetry=telemetry,
+            telemetry=telemetry, mb0=mb0,
         )
     from repro.core import matching as _matching
 
@@ -476,12 +502,30 @@ def _run_engine(
         return _repack(
             _matching.mwm_waves(
                 stream, cfg, schedule=waves, max_width=max_width,
-                telemetry=telemetry,
+                telemetry=telemetry, mb0=_mb0_dense(mb0, cfg, packed),
             ),
             packed,
         )
     if engine == "scan":
-        return _repack(_matching.mwm_scan(stream, cfg), packed)
+        return _repack(
+            _matching.mwm_scan(stream, cfg, mb0=_mb0_dense(mb0, cfg, packed)),
+            packed,
+        )
+    if engine == "ref":
+        from repro.kernels.substream_match import ref as _ref
+
+        w = jnp.where(stream.valid, stream.weight.astype(jnp.float32), 0.0)
+        thr = cfg.thresholds()
+        init = None if mb0 is None else jnp.asarray(mb0)
+        if packed:
+            assigned, mb = _ref.substream_match_ref_packed(
+                stream.src, stream.dst, w, thr, cfg.n, mb0=init
+            )
+            return MatchingResult(assigned=assigned, mb_packed=mb, L=cfg.L)
+        assigned, mb = _ref.substream_match_ref(
+            stream.src, stream.dst, w, thr, cfg.n, mb0=init
+        )
+        return MatchingResult(assigned=assigned, mb=mb.astype(bool))
     raise ValueError(f"unknown engine {engine!r}")
 
 
@@ -517,6 +561,7 @@ def _substream_match_fallback(
     seg_block,
     block_s,
     telemetry,
+    mb0=None,
 ) -> MatchingResult:
     """The fallback cascade resolver (``on_plan_failure="fallback"``).
 
@@ -549,7 +594,7 @@ def _substream_match_fallback(
                     engine, stream, cfg, block_e=block_e, interpret=interpret,
                     packed=packed, waves=waves, max_width=max_width,
                     seg_block=kw["seg_block"], block_s=kw["block_s"],
-                    telemetry=telemetry,
+                    telemetry=telemetry, mb0=mb0,
                 )
         except (_guard.StreamValidationError, _guard.MatchingInvariantError):
             raise
@@ -589,8 +634,15 @@ def substream_match(
     telemetry=obs.DISABLED,
     on_plan_failure: str = "raise",
     validate: str = "off",
+    mb0: jax.Array | None = None,
 ) -> MatchingResult:
     """Run Part 1 on the given stream order via the Pallas kernel.
+
+    ``mb0`` seeds the matching bits with carried-in state (the epoch
+    executor's resume path; see :func:`match_epochs`) — uint8
+    ``[n, ceil(L/8)]`` when ``packed``, bool ``[n, L]`` otherwise.
+    ``None`` (the default) is the plain zero-state run and leaves every
+    jit cache key and kernel call graph byte-identical to before.
 
     ``schedule`` picks the pipeline:
 
@@ -671,22 +723,23 @@ def substream_match(
             stream, cfg, block_e=block_e, interpret=interpret, packed=packed,
             schedule=schedule, waves=waves, max_width=max_width,
             seg_block=seg_block, block_s=block_s, telemetry=telemetry,
+            mb0=mb0,
         )
     if schedule == "edges":
         return _edges_entry(
             stream, cfg, block_e=block_e, interpret=interpret, packed=packed,
-            telemetry=telemetry,
+            telemetry=telemetry, mb0=mb0,
         )
     if schedule == "waves":
         return _substream_match_waves(
             stream, cfg, interpret=interpret, packed=packed,
             waves=waves, max_width=max_width, block_s=block_s,
-            telemetry=telemetry,
+            telemetry=telemetry, mb0=mb0,
         )
     return _substream_match_mega(
         stream, cfg, interpret=interpret, packed=packed,
         waves=waves, max_width=max_width, seg_block=seg_block,
-        telemetry=telemetry,
+        telemetry=telemetry, mb0=mb0,
     )
 
 
@@ -697,6 +750,7 @@ def _edges_entry(
     interpret: bool,
     packed: bool,
     telemetry,
+    mb0=None,
 ) -> MatchingResult:
     """Telemetry shell of the per-edge engine (the jitted body is
     :func:`_substream_match_edges`, unchanged). The edges path has no
@@ -711,10 +765,14 @@ def _edges_entry(
         rec.put_many(plan_counters(plan))
         rec.put("stream.num_edges", m)
         rec.put("traffic.hbm_bytes", traffic_bytes(m_pad, m, plan.width))
-    key = ("edges", cfg.n, cfg.L, cfg.eps, packed, interpret, block_e, m)
+    key = (
+        "edges", cfg.n, cfg.L, cfg.eps, packed, interpret, block_e, m,
+        mb0 is not None,
+    )
     with rec.device_stage(key):
         out = _substream_match_edges(
-            stream, cfg, block_e=block_e, interpret=interpret, packed=packed
+            stream, cfg, block_e=block_e, interpret=interpret, packed=packed,
+            mb0=None if mb0 is None else jnp.asarray(mb0),
         )
         rec.block(out)
     rec.finish()
@@ -728,6 +786,7 @@ def _substream_match_edges(
     block_e: int | None,
     interpret: bool,
     packed: bool,
+    mb0: jax.Array | None = None,
 ) -> MatchingResult:
     plan = vmem_plan(
         cfg.n, cfg.L, packed=packed, block_e=block_e, m=stream.num_edges
@@ -751,11 +810,16 @@ def _substream_match_edges(
         edges = jnp.concatenate([edges, jnp.zeros((pad, 2), jnp.int32)])
         w = jnp.concatenate([w, jnp.zeros((pad,), jnp.float32)])
     thr_pad = _thresholds_padded(cfg, plan.width, packed)
+    mb_init = (
+        None
+        if mb0 is None
+        else _mb0_pad(mb0, cfg.n, plan.words, plan.n_pad, plan.width, packed)
+    )
 
     if packed:
         assigned, mb = _kernel.substream_match_pallas_packed(
             edges, w[:, None], thr_pad, plan.n_pad,
-            block_e=block_e, interpret=interpret,
+            block_e=block_e, interpret=interpret, mb_init=mb_init,
         )
         return MatchingResult(
             assigned=assigned[:m],
@@ -764,7 +828,8 @@ def _substream_match_edges(
         )
 
     assigned, mb = _kernel.substream_match_pallas(
-        edges, w[:, None], thr_pad, plan.n_pad, block_e=block_e, interpret=interpret
+        edges, w[:, None], thr_pad, plan.n_pad, block_e=block_e,
+        interpret=interpret, mb_init=mb_init,
     )
     return MatchingResult(
         assigned=assigned[:m], mb=mb[: cfg.n, : cfg.L].astype(bool)
@@ -778,18 +843,28 @@ def _substream_match_edges(
     ),
 )
 def _waves_device(
-    edges, w, cfg, seg, block_s, n_pad, width, words, interpret, packed
+    edges, w, cfg, seg, block_s, n_pad, width, words, interpret, packed,
+    mb0=None,
 ):
     """Jitted device half of the wave path: run the segment kernel over
     the host-prepped slot stream. ``edges``/``w`` are already
     grid-padded with padding slots remapped to the sacrificial row (see
     :func:`_substream_match_waves`, which also scatters the per-slot
     assignments back to stream positions — a plain numpy indexed store,
-    since every stream position occupies exactly one slot)."""
+    since every stream position occupies exactly one slot). ``mb0``
+    (caller storage) seeds the resident bit block; the sacrificial band
+    pads with zeros."""
     thr_pad = _thresholds_padded(cfg, width, packed)
+    rows = n_pad + _kernel.SACRIFICIAL_ROWS
+    mb_init = (
+        None
+        if mb0 is None
+        else _mb0_pad(mb0, cfg.n, words, rows, width, packed)
+    )
     assigned_slots, mb = _kernel.substream_match_pallas_waves(
         edges, w, thr_pad, n_pad,
         seg=seg, block_s=block_s, interpret=interpret, packed=packed,
+        mb_init=mb_init,
     )
     if packed:
         return assigned_slots, mb[: cfg.n, :words]
@@ -805,6 +880,7 @@ def _substream_match_waves(
     max_width: int | None = None,
     block_s: int | None = None,
     telemetry=obs.DISABLED,
+    mb0=None,
 ) -> MatchingResult:
     from repro.graph import waves as _waves
 
@@ -865,7 +941,7 @@ def _substream_match_waves(
         )
     key = (
         "waves", plan.seg, plan.block_s, plan.n_pad, plan.width, plan.words,
-        interpret, packed, total, cfg.n, cfg.L, cfg.eps,
+        interpret, packed, total, cfg.n, cfg.L, cfg.eps, mb0 is not None,
     )
     with rec.device_stage(key):
         assigned_slots, mb = _waves_device(
@@ -879,6 +955,7 @@ def _substream_match_waves(
             plan.words,
             interpret,
             packed,
+            mb0=None if mb0 is None else jnp.asarray(mb0),
         )
         rec.block((assigned_slots, mb))
     with rec.stage("layout"):
@@ -916,17 +993,25 @@ def _thresholds_flat(cfg: SubstreamConfig, nbits: int) -> jax.Array:
 )
 def _mega_device(
     seg_offsets, uv, w, cfg, seg, seg_block, tiles_per_block,
-    n_pad, width, words, interpret, packed,
+    n_pad, width, words, interpret, packed, mb0=None,
 ):
     """Jitted device half of the mega path. Thresholds are built inside
     the jit (a dozen jnp dispatches otherwise dominate small graphs);
     ``seg_offsets`` rides along as the scalar prefetch so the kernel can
-    bound its tile loop at the layout's real tile count."""
+    bound its tile loop at the layout's real tile count. ``mb0`` (caller
+    storage) seeds the resident bit block; the sacrificial band pads
+    with zeros."""
     thr_flat = _thresholds_flat(cfg, width * 8 if packed else width)
+    rows = n_pad + _kernel.SACRIFICIAL_ROWS
+    mb_init = (
+        None
+        if mb0 is None
+        else _mb0_pad(mb0, cfg.n, words, rows, width, packed)
+    )
     assigned_slots, mb = _kernel.substream_match_pallas_mega(
         uv, w, thr_flat, seg_offsets, n_pad,
         seg=seg, seg_block=seg_block, tiles_per_block=tiles_per_block,
-        interpret=interpret, packed=packed,
+        interpret=interpret, packed=packed, mb_init=mb_init,
     )
     if packed:
         return assigned_slots, mb[: cfg.n, :words]
@@ -942,6 +1027,7 @@ def _substream_match_mega(
     max_width: int | None = None,
     seg_block: int | None = None,
     telemetry=obs.DISABLED,
+    mb0=None,
 ) -> MatchingResult:
     from repro.graph import waves as _waves
 
@@ -1018,7 +1104,7 @@ def _substream_match_mega(
     key = (
         "mega", plan.seg, seg_block, plan.tiles_per_block, plan.n_pad,
         plan.width, plan.words, interpret, packed, total,
-        layout.seg_offsets.shape[0], cfg.n, cfg.L, cfg.eps,
+        layout.seg_offsets.shape[0], cfg.n, cfg.L, cfg.eps, mb0 is not None,
     )
     with rec.device_stage(key):
         assigned_slots, mb = _mega_device(
@@ -1034,6 +1120,7 @@ def _substream_match_mega(
             plan.words,
             interpret,
             packed,
+            mb0=None if mb0 is None else jnp.asarray(mb0),
         )
         rec.block((assigned_slots, mb))
     with rec.stage("layout"):
@@ -1047,3 +1134,155 @@ def _substream_match_mega(
     if packed:
         return MatchingResult(assigned=assigned, mb_packed=mb, L=cfg.L)
     return MatchingResult(assigned=assigned, mb=mb)
+
+
+# --------------------------------------------------------------------------
+# Resumable chunked execution.
+
+#: Engines :func:`match_epochs` can drive. The Pallas schedules go
+#: through :func:`substream_match`'s machinery; ``scan`` / ``waves_xla``
+#: are the XLA engines and ``ref`` the pure-jnp oracle — all accept the
+#: carried ``mb0`` state, so every engine is epoch-chunkable.
+EPOCH_ENGINES = ("edges", "waves", "mega", "scan", "waves_xla", "ref")
+
+
+def epoch_bounds(num_edges: int, epochs: int) -> list[int]:
+    """Stream positions of the epoch barriers: ``epochs + 1`` monotone
+    bounds with near-equal slices (``round(i * m / E)``). Fixed by
+    ``(m, E)`` alone, so a resumed run recomputes identical barriers —
+    snapshots taken by the crashed run land exactly on them."""
+    if epochs < 1:
+        raise ValueError(f"epochs must be >= 1, got {epochs}")
+    return [round(i * num_edges / epochs) for i in range(epochs + 1)]
+
+
+def match_epochs(
+    stream: EdgeStream,
+    cfg: SubstreamConfig,
+    *,
+    epochs: int = 1,
+    engine: str = "mega",
+    state=None,
+    snapshots=None,
+    guard=None,
+    packed: bool | None = None,
+    interpret: bool | None = None,
+    telemetry=obs.DISABLED,
+    validate: str = "off",
+    on_plan_failure: str = "raise",
+    block_e: int | None = None,
+    max_width: int | None = None,
+    seg_block: int | None = None,
+    block_s: int | None = None,
+    epoch_hook=None,
+) -> MatchingResult:
+    """Run Part 1 chunked into ``epochs`` resumable epochs.
+
+    The stream is split at :func:`epoch_bounds`; each epoch runs
+    ``engine`` (one of :data:`EPOCH_ENGINES`) on its slice with the
+    carried matching bits as ``mb0`` and folds the result into a
+    :class:`repro.core.state.MatchState`. Epoch boundaries are barriers,
+    so wave scheduling only sees within-epoch conflict chains, and the
+    result is **bit-identical to the one-shot run** for every engine:
+    greedy matching is confluent in the carried bits, and the recorded
+    ``assigned`` slices concatenate (see ``docs/paper_map.md``).
+
+    Resumability:
+
+    * ``snapshots`` (a :class:`repro.checkpoint.snapshots
+      .SnapshotManager`) commits the state after every epoch and, when
+      ``state`` is not given, resumes from the latest committed
+      snapshot — validating its fingerprint against *this* (stream,
+      cfg, storage) and replaying only the remaining suffix;
+    * ``state`` injects carried state directly (serving-style warm
+      resumes); its fingerprint is validated the same way;
+    * ``guard`` (a :class:`repro.core.executor.ExecutionGuard`) wraps
+      each epoch's device work: per-epoch deadline, bounded retries
+      with exponential backoff on transient faults, straggler EWMA.
+      Permanent faults are the fallback cascade's job — pass
+      ``on_plan_failure="fallback"`` to degrade engines inside the
+      epoch instead of failing it.
+
+    ``epoch_hook(epoch_index, state)`` fires after each epoch's
+    snapshot commit — the crash-injection seam for the recovery tests
+    (faultline's ``kill_at_epoch``). Telemetry: one ``epoch.index``
+    event per executed epoch plus the ``epoch.count`` counter;
+    ``epochs=1`` with no snapshots/guard is exactly a one-shot call.
+    """
+    if engine not in EPOCH_ENGINES:
+        raise ValueError(f"unknown engine {engine!r}; use {EPOCH_ENGINES}")
+    if on_plan_failure not in ("raise", "fallback"):
+        raise ValueError(
+            f"unknown on_plan_failure {on_plan_failure!r}; "
+            f"use 'raise' or 'fallback'"
+        )
+    if validate != "off":
+        from repro.core import guard as _guard
+
+        stream, _ = _guard.validate_stream(
+            stream, cfg.n, policy=validate, telemetry=telemetry
+        )
+    interpret = resolve_interpret(interpret)
+    packed = _resolve_packed(cfg, packed)
+    if cfg.n == 0:
+        return _empty_result(stream, cfg, packed)
+    from repro.core.state import MatchState
+
+    template = MatchState.initial(stream, cfg, packed)
+    if state is None and snapshots is not None:
+        state = snapshots.latest(template)
+    if state is None:
+        state = template
+    elif state.fingerprint != template.fingerprint:
+        from repro.checkpoint.snapshots import SnapshotMismatchError
+
+        raise SnapshotMismatchError(
+            f"carried state fingerprints {state.fingerprint!r}, run "
+            f"fingerprints {template.fingerprint!r} — different stream, "
+            f"config, or storage layout"
+        )
+    m = stream.num_edges
+    bounds = epoch_bounds(m, epochs)
+    fallback = on_plan_failure == "fallback" and engine in (
+        "edges", "waves", "mega",
+    )
+    for k in range(epochs):
+        a, b = max(bounds[k], state.pos), bounds[k + 1]
+        if b <= state.pos:
+            continue  # already durable in the carried state
+        sub = EdgeStream(
+            src=stream.src[a:b],
+            dst=stream.dst[a:b],
+            weight=stream.weight[a:b],
+            valid=stream.valid[a:b],
+        )
+        telemetry.event(
+            "epoch.index", epoch=k, start=a, end=b, engine=engine,
+        )
+        telemetry.count("epoch.count")
+        mb0 = state.mb0
+
+        def run_one(sub=sub, mb0=mb0):
+            if fallback:
+                return _substream_match_fallback(
+                    sub, cfg, block_e=block_e, interpret=interpret,
+                    packed=packed, schedule=engine, waves=None,
+                    max_width=max_width, seg_block=seg_block,
+                    block_s=block_s, telemetry=telemetry, mb0=mb0,
+                )
+            return _run_engine(
+                engine, sub, cfg, block_e=block_e, interpret=interpret,
+                packed=packed, waves=None, max_width=max_width,
+                seg_block=seg_block, block_s=block_s, telemetry=telemetry,
+                mb0=mb0,
+            )
+
+        out = guard.run(run_one, label=f"epoch[{k}]") if guard else run_one()
+        state = state.advance(out, b)
+        if snapshots is not None:
+            snapshots.save(state)
+        if epoch_hook is not None:
+            epoch_hook(k, state)
+    if snapshots is not None:
+        snapshots.wait()
+    return state.result()

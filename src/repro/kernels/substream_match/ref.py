@@ -17,8 +17,10 @@ def substream_match_ref(
     weight: jax.Array,  # float [m]; <= 0 encodes padding/invalid
     thresholds: jax.Array,  # float32 [L]
     n: int,
+    mb0: jax.Array | None = None,  # int8/bool [n, L] carried-in bits
 ):
-    """Returns (assigned int32 [m], mb int8 [n, L])."""
+    """Returns (assigned int32 [m], mb int8 [n, L]). ``mb0`` seeds the
+    matching bits (the epoch executor's carried state); default zeros."""
     L = thresholds.shape[0]
 
     def step(mb, e):
@@ -37,8 +39,10 @@ def substream_match_ref(
         ).max()
         return mb, idx
 
-    mb0 = jnp.zeros((n, L), jnp.int8)
-    mb, assigned = jax.lax.scan(step, mb0, (src, dst, weight))
+    init = (
+        jnp.zeros((n, L), jnp.int8) if mb0 is None else mb0.astype(jnp.int8)
+    )
+    mb, assigned = jax.lax.scan(step, init, (src, dst, weight))
     return assigned, mb
 
 
@@ -48,6 +52,7 @@ def substream_match_ref_packed(
     weight: jax.Array,  # float [m]; <= 0 encodes padding/invalid
     thresholds: jax.Array,  # float32 [L]
     n: int,
+    mb0: jax.Array | None = None,  # uint8 [n, ceil(L/8)] carried-in bits
 ):
     """Packed-word oracle: the same scan, but the state is the uint8
     bit-plane word of :mod:`repro.core.bitpack` and every per-edge update is
@@ -82,6 +87,8 @@ def substream_match_ref_packed(
         idx = jnp.where(hit, bitidx, -1).max()
         return mb, idx
 
-    mb0 = jnp.zeros((n, W), jnp.uint8)
-    mb, assigned = jax.lax.scan(step, mb0, (src, dst, weight))
+    init = (
+        jnp.zeros((n, W), jnp.uint8) if mb0 is None else mb0.astype(jnp.uint8)
+    )
+    mb, assigned = jax.lax.scan(step, init, (src, dst, weight))
     return assigned, mb

@@ -260,3 +260,130 @@ def failing(*targets: str, exc_type=InjectedFailure):
     finally:
         for module, attr, fn in reversed(saved):
             setattr(module, attr, fn)
+
+
+# --------------------------------------------------------------------------
+# Execution faults (crashes, hangs, flakes) for the resumable executor —
+# used by tests/test_resume.py and tests/test_fault_tolerance.py.
+
+
+class SimulatedCrash(BaseException):
+    """A process death, not an error: derives from ``BaseException`` so
+    no ``except Exception`` in the pipeline (the fallback cascade, the
+    ExecutionGuard) can absorb it — exactly like a real SIGKILL, the
+    only recovery is to restart and resume from the latest snapshot."""
+
+
+class TransientFlake(RuntimeError):
+    """A retry-worthy failure (``transient = True``): the deterministic
+    stand-in for a flaky interconnect or preempted device that the
+    ExecutionGuard's retry/backoff path must survive."""
+
+    transient = True
+
+
+def kill_at_epoch(k: int):
+    """An ``epoch_hook`` for ``match_epochs`` that crashes *after* epoch
+    ``k`` completed and snapshotted — the canonical crash-matrix kill
+    point (state for epochs ``<= k`` is durable, the rest is lost)."""
+
+    def hook(epoch: int, state):
+        if epoch == k:
+            raise SimulatedCrash(f"killed after epoch {k}")
+
+    return hook
+
+
+def kill_mid_snapshot(manager, after_files: int = 1):
+    """Make ``manager`` (a CheckpointManager or SnapshotManager) crash
+    inside the commit: the tmp dir is fully written but the durable
+    rename never happens, simulating power loss mid-commit. The next
+    manager over the same directory must see only the previous step.
+    Returns the patched underlying CheckpointManager."""
+    mgr = getattr(manager, "manager", manager)
+
+    def _crash(tmp, final):
+        raise SimulatedCrash(f"killed mid-snapshot before rename of {tmp}")
+
+    mgr._commit = _crash
+    return mgr
+
+
+class FakeClock:
+    """Deterministic monotonic clock + sleep recorder for guard tests.
+
+    ``clock()`` returns the current fake time; ``sleep(s)`` records
+    ``s`` into ``sleeps`` and advances the clock. ``advance`` (set it
+    before a call, or from inside the guarded fn via :func:`slow`)
+    adds extra seconds to the *next* clock read — how tests make one
+    attempt blow a deadline without real waiting."""
+
+    def __init__(self):
+        self.now = 0.0
+        self.sleeps: list[float] = []
+        self.advance = 0.0
+
+    def __call__(self) -> float:
+        self.now += self.advance
+        self.advance = 0.0
+        return self.now
+
+    def sleep(self, seconds: float) -> None:
+        self.sleeps.append(seconds)
+        self.now += seconds
+
+
+def slow(fn, clock: FakeClock, seconds: float):
+    """Wrap ``fn`` so each call appears to take ``seconds`` on the fake
+    clock (drives the deadline and straggler paths deterministically)."""
+
+    def wrapped(*args, **kwargs):
+        clock.advance = seconds
+        return fn(*args, **kwargs)
+
+    return wrapped
+
+
+def flake(fn, times: int, exc_type=TransientFlake):
+    """Fail the first ``times`` calls with ``exc_type``, then delegate —
+    the fail-N-times-then-succeed shape the retry budget is sized for.
+    The wrapper exposes ``calls`` for assertions."""
+    state = {"calls": 0}
+
+    def wrapped(*args, **kwargs):
+        state["calls"] += 1
+        if state["calls"] <= times:
+            raise exc_type(
+                f"injected flake {state['calls']}/{times} in "
+                f"{getattr(fn, '__name__', fn)!r}"
+            )
+        return fn(*args, **kwargs)
+
+    wrapped.calls = state
+    return wrapped
+
+
+@contextlib.contextmanager
+def flaky(*targets: str, times: int = 1, exc_type=TransientFlake):
+    """Like :func:`failing`, but fail-N-then-succeed: the named ops /
+    matching internals raise ``exc_type`` on their first ``times``
+    calls (counted per target) and then behave normally. Restores the
+    originals on exit."""
+    from repro.core import matching as _matching
+    from repro.kernels.substream_match import ops as _ops
+
+    unknown = [t for t in targets if t not in _TARGETS]
+    if unknown:
+        raise ValueError(f"unknown targets {unknown}; use {sorted(_TARGETS)}")
+
+    saved = []
+    try:
+        for t in targets:
+            attr = _TARGETS[t]
+            module = _matching if t in ("scan_oracle", "waves_xla") else _ops
+            saved.append((module, attr, getattr(module, attr)))
+            setattr(module, attr, flake(getattr(module, attr), times, exc_type))
+        yield
+    finally:
+        for module, attr, fn in reversed(saved):
+            setattr(module, attr, fn)

@@ -10,7 +10,10 @@ split and a counter set matching the embedded ``expected_counters``
 plan accounting bit-exactly — missing or inconsistent telemetry fails
 the gate too. The guard gate additionally requires a clean per-graph
 ``validation`` record and ``fallback.count == 0`` on every Pallas row:
-a bench number must come from the engine it is labeled with.
+a bench number must come from the engine it is labeled with. Gate 7
+(the recovery gate) requires every graph to embed a ``recovery`` block
+from the resumable path with snapshot producer stall within budget, a
+bit-exact killed-and-resumed result, and zero clean-path retries.
 """
 import json
 import pathlib
@@ -21,13 +24,15 @@ import pytest
 from benchmarks.bench_throughput import (
     TARGET_FILL,
     TARGET_MEGA_VS_XLA,
+    TARGET_SNAPSHOT_OVERHEAD_PCT,
     TARGET_SPEEDUP,
     check_report,
 )
 
 #: Gate messages: 3 perf gates + telemetry structure + plan counters
-#: + the clean-path guard (validation clean, no fallback degradation).
-N_GATES = 6
+#: + the clean-path guard (validation clean, no fallback degradation)
+#: + the recovery gate (snapshot stall, bit-exact resume, zero retries).
+N_GATES = 7
 
 _WAVES_EXPECT = {
     "plan.gather_bytes": 960,
@@ -86,6 +91,19 @@ def _graph(scale=10, speedup=9.0, fill=0.7, mega=1.3):
         "expected_counters": {
             "pallas_waves": dict(_WAVES_EXPECT),
             "pallas_mega": dict(_MEGA_EXPECT),
+        },
+        "recovery": {
+            "epochs": 4,
+            "engine": "mega",
+            "chunked_seconds": 0.013,
+            "chunked_snapshot_seconds": 0.019,
+            "snapshot_stall_seconds": 0.0004,
+            "snapshot_overhead_pct": 3.1,
+            "flush_seconds": 0.003,
+            "kill_after_epoch": 1,
+            "recover_seconds": 0.018,
+            "resumed_bit_exact": True,
+            "clean_retries": 0,
         },
         "engines": engines,
     }
@@ -263,6 +281,66 @@ def test_non_pallas_rows_exempt_from_fallback_counter():
     assert "fallback.count" not in g["engines"]["waves_xla"]["counters"]
     ok, _ = check_report(_report([g]))
     assert ok
+
+
+def test_snapshot_overhead_gate_boundary_is_inclusive():
+    """Gate 7: overhead exactly at the target passes, above fails with a
+    message naming the scale and the measured percentage."""
+    g = _graph()
+    g["recovery"]["snapshot_overhead_pct"] = TARGET_SNAPSHOT_OVERHEAD_PCT
+    ok, _ = check_report(_report([g]))
+    assert ok
+    g["recovery"]["snapshot_overhead_pct"] = TARGET_SNAPSHOT_OVERHEAD_PCT + 0.01
+    ok, msgs = check_report(_report([g]))
+    assert not ok
+    msg = next(m for m in msgs if "recovery" in m and m.startswith("FAIL"))
+    assert "snapshot overhead" in msg and "scale 10" in msg
+
+
+def test_non_bit_exact_resume_fails():
+    """Gate 7: a resumed result that diverged from the one-shot run is a
+    correctness failure, whatever the overhead says."""
+    g = _graph()
+    g["recovery"]["resumed_bit_exact"] = False
+    ok, msgs = check_report(_report([g]))
+    assert not ok
+    assert any("not bit-exact" in m for m in msgs)
+
+
+def test_clean_path_retries_fail():
+    """Gate 7: the guard firing on an uninjected run means the engines
+    are flaky (or the guard misclassifies) — never acceptable."""
+    g = _graph()
+    g["recovery"]["clean_retries"] = 2
+    ok, msgs = check_report(_report([g]))
+    assert not ok
+    assert any("clean_retries = 2" in m for m in msgs)
+
+
+def test_missing_recovery_block_fails():
+    """Gate 7 fails loudly when the recovery block (or its gated
+    overhead field) is missing — a bench refactor that stops measuring
+    the resumable path cannot pass vacuously."""
+    g = _graph()
+    del g["recovery"]
+    ok, msgs = check_report(_report([g]))
+    assert not ok
+    assert any("no recovery block" in m for m in msgs)
+    g2 = _graph()
+    del g2["recovery"]["snapshot_overhead_pct"]
+    ok, msgs = check_report(_report([g2]))
+    assert not ok
+    assert any("no snapshot_overhead_pct" in m for m in msgs)
+
+
+def test_recovery_gate_enforced_on_every_graph():
+    """A single over-budget graph fails even when the others pass."""
+    g10, g12 = _graph(10), _graph(12)
+    g12["recovery"]["snapshot_overhead_pct"] = 40.0
+    ok, msgs = check_report(_report([g10, g12]))
+    assert not ok
+    msg = next(m for m in msgs if "recovery" in m and m.startswith("FAIL"))
+    assert "scale 12" in msg and "scale 10" not in msg
 
 
 def test_check_exits_nonzero_with_message(monkeypatch, capsys):

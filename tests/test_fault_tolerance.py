@@ -1,0 +1,276 @@
+"""Fault-tolerance unit coverage: remesh ladders, straggler EWMA, guard.
+
+The file the ``distributed/`` docstrings point at: ``plan_remesh``
+degradation across shrinking device pools, host-device mesh rebuilds,
+``StragglerMonitor`` with injected delays, and the
+:class:`repro.core.executor.ExecutionGuard` retry/backoff/deadline
+machinery driven deterministically by faultline's ``FakeClock``.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core import ExecutionGuard, RetriesExhaustedError, is_transient
+from repro.core.executor import DeadlineExceededError
+from repro.core.matching import mwm_scan
+from repro.core.types import EdgeStream, SubstreamConfig
+from repro.distributed import StragglerMonitor, plan_remesh
+from repro.distributed.elastic import build_mesh
+from repro.kernels.substream_match.ops import match_epochs
+from repro.testing import faultline
+
+
+# ------------------------------------------------------------ plan_remesh
+
+
+@pytest.mark.parametrize("n", [1, 2, 3, 4, 5, 8, 9, 16, 17, 31, 32, 48, 64, 100])
+def test_plan_remesh_invariants(n):
+    plan = plan_remesh(n)
+    assert plan.data >= 1 and plan.model >= 1
+    assert plan.n_devices == plan.data * plan.model
+    assert plan.n_devices <= n
+    assert plan.dropped_devices == n - plan.n_devices
+    assert plan.model <= 16  # never exceeds prefer_model
+
+
+def test_plan_remesh_degradation_ladder():
+    """Shrinking pools keep producing legal meshes; the model axis never
+    grows as devices drop, and full pools waste nothing."""
+    prev_model = None
+    for n in (64, 32, 16, 8, 4, 2, 1):
+        plan = plan_remesh(n)
+        assert plan.dropped_devices == 0  # powers of two pack exactly
+        if prev_model is not None:
+            assert plan.model <= prev_model
+        prev_model = plan.model
+
+
+def test_plan_remesh_prefers_model_axis():
+    plan = plan_remesh(64, prefer_model=16)
+    assert plan.model == 16 and plan.data == 4
+
+
+def test_plan_remesh_min_model_floor():
+    plan = plan_remesh(3, prefer_model=16, min_model=1)
+    assert plan.model >= 1
+    assert plan.n_devices <= 3
+
+
+def test_build_mesh_host_devices():
+    n = len(jax.devices())
+    plan = plan_remesh(n)
+    mesh = build_mesh(plan)
+    assert mesh.axis_names == ("data", "model")
+    assert mesh.devices.shape == (plan.data, plan.model)
+
+
+# ------------------------------------------------------- StragglerMonitor
+
+
+def test_straggler_warmup_and_seed():
+    mon = StragglerMonitor(alpha=0.5, threshold=2.0, warmup_steps=3)
+    assert mon.observe(1.0) is None  # seeds the EWMA
+    assert mon.ewma == 1.0
+    # inside warmup even a huge outlier is not flagged
+    assert mon.observe(10.0) is None
+    assert len(mon.events) == 0
+
+
+def test_straggler_flags_injected_delay():
+    mon = StragglerMonitor(alpha=0.1, threshold=2.0, warmup_steps=2)
+    for _ in range(4):
+        mon.observe(1.0)
+    ewma_before = mon.ewma
+    event = mon.observe(5.0)  # injected straggler
+    assert event is not None
+    assert event.ratio == pytest.approx(5.0 / ewma_before)
+    # the outlier must not pollute the EWMA
+    assert mon.ewma == ewma_before
+    assert list(mon.events) == [event]
+
+
+def test_straggler_normal_steps_update_ewma():
+    mon = StragglerMonitor(alpha=0.5, threshold=10.0, warmup_steps=1)
+    mon.observe(1.0)
+    mon.observe(2.0)
+    assert mon.ewma == pytest.approx(1.5)
+
+
+def test_straggler_history_bounded():
+    mon = StragglerMonitor(alpha=0.1, threshold=1.5, warmup_steps=0, history=3)
+    mon.observe(1.0)
+    for _ in range(10):
+        mon.observe(100.0)
+    assert len(mon.events) == 3
+
+
+# --------------------------------------------------------- classification
+
+
+def test_is_transient_classification():
+    assert is_transient(faultline.TransientFlake("x"))
+    assert is_transient(TimeoutError("x"))
+    assert is_transient(ConnectionError("x"))
+    assert is_transient(DeadlineExceededError(2.0, 1.0))
+    assert not is_transient(ValueError("x"))
+    assert not is_transient(RuntimeError("x"))
+
+    class PinnedPermanent(TimeoutError):
+        transient = False
+
+    assert not is_transient(PinnedPermanent("x"))
+
+
+# ---------------------------------------------------------- ExecutionGuard
+
+
+def _guard(clk, **kw):
+    kw.setdefault("retries", 3)
+    kw.setdefault("backoff", 0.05)
+    kw.setdefault("backoff_factor", 2.0)
+    return ExecutionGuard(clock=clk, sleep=clk.sleep, **kw)
+
+
+def test_guard_clean_path_no_retries():
+    clk = faultline.FakeClock()
+    tel = obs.Telemetry()
+    g = _guard(clk, telemetry=tel)
+    assert g.run(lambda: "ok") == "ok"
+    assert clk.sleeps == []
+    assert g.retry_log == []
+    assert "guard.retry" not in tel.counters.asdict()
+
+
+def test_guard_backoff_schedule_exact():
+    """Retry delays follow base * factor**attempt exactly."""
+    clk = faultline.FakeClock()
+    tel = obs.Telemetry()
+    g = _guard(clk, telemetry=tel)
+    fn = faultline.flake(lambda: 42, times=3)
+    assert g.run(fn) == 42
+    assert clk.sleeps == [0.05, 0.10, 0.20]
+    assert [d for (_, _, d) in g.retry_log] == [0.05, 0.10, 0.20]
+    assert tel.counters.asdict()["guard.retry"] == 3
+    retry_events = [e for e in tel.events if e["name"] == "guard.retry"]
+    assert [e["attempt"] for e in retry_events] == [0, 1, 2]
+    assert [e["delay_seconds"] for e in retry_events] == [0.05, 0.10, 0.20]
+
+
+def test_guard_retries_exhausted():
+    clk = faultline.FakeClock()
+    g = _guard(clk, retries=2)
+    fn = faultline.flake(lambda: 42, times=99)
+    with pytest.raises(RetriesExhaustedError) as exc:
+        g.run(fn)
+    assert len(exc.value.attempts) == 3  # first try + 2 retries
+    assert clk.sleeps == [0.05, 0.10]
+
+
+def test_guard_permanent_fault_no_retry():
+    clk = faultline.FakeClock()
+    g = _guard(clk)
+    calls = {"n": 0}
+
+    def fn():
+        calls["n"] += 1
+        raise ValueError("permanent")
+
+    with pytest.raises(ValueError):
+        g.run(fn)
+    assert calls["n"] == 1
+    assert clk.sleeps == []
+
+
+def test_guard_deadline_exceeded_is_retried():
+    clk = faultline.FakeClock()
+    g = _guard(clk, deadline=1.0, retries=1)
+    slow_then_fast = {"n": 0}
+
+    def fn():
+        slow_then_fast["n"] += 1
+        clk.advance = 5.0 if slow_then_fast["n"] == 1 else 0.01
+        return "done"
+
+    assert g.run(fn) == "done"
+    assert slow_then_fast["n"] == 2
+    assert isinstance(g.retry_log[0][1], DeadlineExceededError)
+
+
+def test_guard_deadline_exhausts_to_error():
+    clk = faultline.FakeClock()
+    g = _guard(clk, deadline=1.0, retries=1)
+    with pytest.raises(RetriesExhaustedError) as exc:
+        g.run(faultline.slow(lambda: "x", clk, 5.0))
+    assert all(isinstance(e, DeadlineExceededError) for e in exc.value.attempts)
+
+
+def test_guard_never_absorbs_simulated_crash():
+    clk = faultline.FakeClock()
+    g = _guard(clk)
+
+    def fn():
+        raise faultline.SimulatedCrash("kill -9")
+
+    with pytest.raises(faultline.SimulatedCrash):
+        g.run(fn)
+    assert clk.sleeps == []
+
+
+def test_guard_feeds_straggler_monitor():
+    clk = faultline.FakeClock()
+    tel = obs.Telemetry()
+    mon = StragglerMonitor(alpha=0.1, threshold=2.0, warmup_steps=2)
+    g = _guard(clk, monitor=mon, telemetry=tel)
+    for _ in range(4):
+        g.run(faultline.slow(lambda: None, clk, 1.0))
+    g.run(faultline.slow(lambda: None, clk, 8.0))  # injected straggler
+    events = [e for e in tel.events if e["name"] == "guard.straggler"]
+    assert len(events) == 1
+    assert events[0]["ratio"] > 2.0
+    assert tel.counters.asdict()["guard.straggler"] == 1
+
+
+def test_guard_rejects_negative_retries():
+    with pytest.raises(ValueError):
+        ExecutionGuard(retries=-1)
+
+
+# --------------------------------------- guard + epoch executor integration
+
+
+def _small_stream(seed=7, n=32, m=96, L=8):
+    rng = np.random.default_rng(seed)
+    stream = EdgeStream.from_numpy(
+        rng.integers(0, n, m).astype(np.int32),
+        rng.integers(0, n, m).astype(np.int32),
+        rng.uniform(1.0, 40.0, m).astype(np.float32),
+    )
+    return stream, SubstreamConfig(n=n, L=L)
+
+
+def test_flaky_engine_retried_bit_exact():
+    """A transient flake in the scan engine is retried by the guard and
+    the chunked run still matches the one-shot oracle bit-for-bit."""
+    stream, cfg = _small_stream()
+    ref = mwm_scan(stream, cfg)
+    clk = faultline.FakeClock()
+    tel = obs.Telemetry()
+    g = _guard(clk, telemetry=tel)
+    with faultline.flaky("scan_oracle", times=1):
+        out = match_epochs(
+            stream, cfg, epochs=3, engine="scan", guard=g, telemetry=tel
+        )
+    assert np.array_equal(np.asarray(out.assigned), np.asarray(ref.assigned))
+    assert np.array_equal(np.asarray(out.mb), np.asarray(ref.mb))
+    assert tel.counters.asdict()["guard.retry"] == 1
+    assert clk.sleeps == [0.05]
+
+
+def test_transient_flake_exhaustion_propagates():
+    stream, cfg = _small_stream()
+    clk = faultline.FakeClock()
+    g = _guard(clk, retries=1)
+    with faultline.flaky("scan_oracle", times=99):
+        with pytest.raises(RetriesExhaustedError):
+            match_epochs(stream, cfg, epochs=2, engine="scan", guard=g)
